@@ -1,0 +1,100 @@
+"""Kernel micro-benchmarks: wall time of the jnp oracle paths on CPU (the
+Pallas kernels themselves are TPU-target; interpret mode timing is
+meaningless, so we bench the reference paths the kernels mirror and report
+the analytic FLOPs/bytes each kernel would move on a v5e)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_kmeans():
+    rows = []
+    for n, d, k in [(2500, 200, 10), (2500, 200, 20), (50_000, 200, 10)]:
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(n, d)),
+                        jnp.float32)
+        c = jnp.asarray(np.random.default_rng(1).normal(size=(k, d)),
+                        jnp.float32)
+        f = jax.jit(ref.kmeans_pairwise_dist_ref)
+        dt = _time(f, x, c)
+        flops = 2.0 * n * d * k
+        tpu_est = max(flops / PEAK_FLOPS_BF16,
+                      (n * d + k * d + n * k) * 4 / HBM_BW)
+        rows.append((f"kmeans_dist n={n} d={d} k={k}", dt * 1e6,
+                     f"tpu_roofline_us={tpu_est*1e6:.2f}"))
+    return rows
+
+
+def bench_attention():
+    rows = []
+    for b, s, h, kv, d in [(1, 1024, 8, 4, 64), (1, 2048, 8, 4, 64)]:
+        q = jnp.asarray(np.random.default_rng(0).normal(size=(b, s, h, d)),
+                        jnp.bfloat16)
+        k = jnp.asarray(np.random.default_rng(1).normal(size=(b, s, kv, d)),
+                        jnp.bfloat16)
+        v = jnp.asarray(np.random.default_rng(2).normal(size=(b, s, kv, d)),
+                        jnp.bfloat16)
+        f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v,
+                                                            causal=True))
+        dt = _time(f, q, k, v, iters=3)
+        flops = 4.0 * b * h * s * s * d
+        rows.append((f"attn b={b} s={s} h={h} d={d}", dt * 1e6,
+                     f"tpu_roofline_us={flops/PEAK_FLOPS_BF16*1e6:.2f}"))
+    return rows
+
+
+def bench_decode():
+    rows = []
+    for b, s, h, kv, d in [(4, 32_768, 8, 4, 128), (1, 131_072, 8, 4, 128)]:
+        q = jnp.asarray(np.random.default_rng(0).normal(size=(b, 1, h, d)),
+                        jnp.bfloat16)
+        kc = jnp.asarray(np.random.default_rng(1).normal(size=(b, s, kv, d)),
+                         jnp.bfloat16)
+        vc = jnp.asarray(np.random.default_rng(2).normal(size=(b, s, kv, d)),
+                         jnp.bfloat16)
+        valid = jnp.ones((b, s), bool)
+        f = jax.jit(ref.flash_decode_ref)
+        dt = _time(f, q, kc, vc, valid, iters=3)
+        nbytes = 2.0 * b * s * kv * d * 2
+        rows.append((f"decode b={b} S={s}", dt * 1e6,
+                     f"tpu_hbm_bound_us={nbytes/HBM_BW*1e6:.2f}"))
+    return rows
+
+
+def bench_selection_pipeline():
+    """Full §3.1 pipeline at paper scale: 2500 maps/client."""
+    from repro.core.selection import select_metadata
+    rows = []
+    acts = jnp.asarray(np.random.default_rng(0).normal(size=(2500, 16, 16, 4)),
+                       jnp.float32)
+    labels = jnp.asarray(np.random.default_rng(1).integers(0, 10, 2500))
+    key = jax.random.PRNGKey(0)
+
+    def run():
+        return select_metadata(acts, labels, key, num_classes=10,
+                               clusters_per_class=10, pca_components=64,
+                               kmeans_iters=25)
+    run()
+    t0 = time.perf_counter()
+    s = run()
+    jax.block_until_ready(s.indices)
+    dt = time.perf_counter() - t0
+    rows.append(("selection_pipeline_2500maps", dt * 1e6,
+                 f"selected={int(np.asarray(s.valid).sum())}"))
+    return rows

@@ -1,0 +1,43 @@
+"""Baseline (paper-faithful, untagged) vs optimized (tag=opt: flash-VJP,
+mask ring-writes, head-aware inference sharding, seq-sharded caches) across
+all pairs — the §Perf summary table.
+
+  PYTHONPATH=src python -m benchmarks.opt_compare
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline_report import ARCH_ORDER, SHAPE_ORDER, fmt, load
+
+
+def main():
+    base = load("experiments/dryrun", multipod=False, tag="")
+    opt = load("experiments/dryrun", multipod=False, tag="opt")
+    print("| arch | shape | baseline bound (s) | optimized bound (s) | step speedup |")
+    print("|---|---|---|---|---|")
+    gains = []
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            b, o = base.get((a, s)), opt.get((a, s))
+            if not b or not o or b["status"] != "ok" or o["status"] != "ok":
+                continue
+            tb = max(b["roofline"][k] for k in
+                     ("compute_s", "memory_s", "collective_s"))
+            to = max(o["roofline"][k] for k in
+                     ("compute_s", "memory_s", "collective_s"))
+            sp = tb / to if to else float("inf")
+            gains.append(sp)
+            mark = " **" if sp >= 1.5 else " "
+            print(f"| {a} | {s} | {fmt(tb)} ({b['roofline']['bound']}) | "
+                  f"{fmt(to)} ({o['roofline']['bound']}) |{mark}{sp:.2f}x |")
+    if gains:
+        import math
+        geo = math.exp(sum(math.log(g) for g in gains) / len(gains))
+        print(f"\ngeomean step speedup over {len(gains)} pairs: {geo:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: split-network federated learning with clustered data selection
+(Shi & Radu, EuroMLSys 2022) as a production-grade multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,119 @@
+"""Pytree checkpointing on npz: flatten with '/'-joined key paths, save
+atomically, restore into the original structure. No orbax dependency —
+works for FL round state (global weights + round counter + rng) and for the
+LM training loop.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> tuple:
+    """Returns (flat dict of npz-safe arrays, dtype map for ml_dtypes leaves
+    like bfloat16 that np.savez can't round-trip — stored as uint16 views)."""
+    flat, dtypes = {}, {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name not in np.sctypeDict:
+            dtypes[key] = arr.dtype.name        # e.g. "bfloat16"
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        flat[key] = arr
+    return flat, dtypes
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    metadata: Optional[dict] = None) -> str:
+    """Atomic save: write to tmp then rename. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    flat, dtypes = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    meta = dict(metadata or {}, step=step, __dtypes__=dtypes)
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, target: PyTree,
+                       step: Optional[int] = None) -> tuple:
+    """Restore into ``target``'s structure. Returns (tree, metadata)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(str(data["__meta__"]))
+        flat = {k: data[k] for k in data.files if k != "__meta__"}
+    dtypes = meta.pop("__dtypes__", {})
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for path_elems, leaf in paths_leaves:
+        key = _SEP.join(_path_str(p) for p in path_elems)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if key in dtypes:                        # e.g. bfloat16 stored as u16
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, dtypes[key])))
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+class CheckpointManager:
+    """Keeps the last ``max_to_keep`` checkpoints in a directory."""
+
+    def __init__(self, directory: str, max_to_keep: int = 3):
+        self.directory = directory
+        self.max_to_keep = max_to_keep
+
+    def save(self, step: int, tree: PyTree, metadata: Optional[dict] = None):
+        path = save_checkpoint(self.directory, step, tree, metadata)
+        steps = sorted(int(m.group(1)) for f in os.listdir(self.directory)
+                       if (m := re.match(r"ckpt_(\d+)\.npz$", f)))
+        for s in steps[:-self.max_to_keep]:
+            os.unlink(os.path.join(self.directory, f"ckpt_{s:08d}.npz"))
+        return path
+
+    def restore(self, target: PyTree, step: Optional[int] = None):
+        return restore_checkpoint(self.directory, target, step)
+
+    @property
+    def latest(self) -> Optional[int]:
+        return latest_step(self.directory)

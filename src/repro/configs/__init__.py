@@ -1,0 +1,37 @@
+"""Config registry: ``get_config(arch_id)`` and the assigned-architecture list."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (FLConfig, INPUT_SHAPES, ModelConfig,
+                                ShapeConfig, TrainConfig)
+
+# arch-id -> module name
+ARCHS = {
+    "gemma3-4b":            "gemma3_4b",
+    "internvl2-26b":        "internvl2_26b",
+    "qwen3-moe-30b-a3b":    "qwen3_moe_30b_a3b",
+    "phi3-medium-14b":      "phi3_medium_14b",
+    "llama3.2-1b":          "llama3_2_1b",
+    "whisper-medium":       "whisper_medium",
+    "qwen2-0.5b":           "qwen2_0_5b",
+    "rwkv6-3b":             "rwkv6_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "deepseek-v2-236b":     "deepseek_v2_236b",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch_id]}")
+    return mod.CONFIG
+
+
+def get_wrn_config():
+    from repro.configs.wrn_cifar import CONFIG
+    return CONFIG
+
+
+__all__ = ["ARCHS", "get_config", "get_wrn_config", "ModelConfig",
+           "ShapeConfig", "INPUT_SHAPES", "FLConfig", "TrainConfig"]

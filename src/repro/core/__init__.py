@@ -1,0 +1,13 @@
+from repro.core.selection import (select_metadata, kmeans, pca_fit,
+                                  pca_transform, representatives, Selection)
+from repro.core.split import SplitModel
+from repro.core.fedavg import (weight_average, weight_average_stacked,
+                               local_update, broadcast_to_clients)
+from repro.core.meta_training import meta_train
+from repro.core.compose import compose, evaluate
+from repro.core.rounds import run_round, RoundResult
+
+__all__ = ["select_metadata", "kmeans", "pca_fit", "pca_transform",
+           "representatives", "Selection", "SplitModel", "weight_average",
+           "weight_average_stacked", "local_update", "broadcast_to_clients",
+           "meta_train", "compose", "evaluate", "run_round", "RoundResult"]

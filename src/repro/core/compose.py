@@ -1,0 +1,47 @@
+"""§3.3 ModelCompose + evaluation of M_COM(t)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.split import SplitModel
+
+PyTree = Any
+
+
+def compose(model: SplitModel, fedavg_params: PyTree,
+            upper_trained: PyTree) -> PyTree:
+    """M_COM(t) = [ W_G^l(t-1) ; W_S^u(t) ]."""
+    lower, _ = model.split(fedavg_params)
+    return model.merge(lower, upper_trained)
+
+
+@functools.partial(jax.jit, static_argnames=("model", "batch_size"))
+def _eval_batched(model: SplitModel, params: PyTree, x, y, batch_size: int):
+    n = x.shape[0]
+    steps = n // batch_size
+    xs = x[:steps * batch_size].reshape((steps, batch_size) + x.shape[1:])
+    ys = y[:steps * batch_size].reshape(steps, batch_size)
+
+    def body(correct, batch):
+        bx, by = batch
+        logits = model.apply(params, bx)
+        if logits.ndim == 3:                 # LM: next-token accuracy
+            pred = jnp.argmax(logits[:, :-1], -1)
+            hits = (pred == bx[:, 1:]).mean(-1).sum()
+        else:
+            hits = (jnp.argmax(logits, -1) == by).sum()
+        return correct + hits, None
+
+    correct, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ys))
+    return correct / (steps * batch_size)
+
+
+def evaluate(model: SplitModel, params: PyTree, x, y,
+             batch_size: int = 200) -> float:
+    """Test accuracy of a (composed) model — the paper's reported metric."""
+    return float(_eval_batched(model, params, jnp.asarray(x), jnp.asarray(y),
+                               min(batch_size, x.shape[0])))

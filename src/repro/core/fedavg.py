@@ -1,0 +1,68 @@
+"""FedAvg (McMahan et al.) — the paper's Eq. (2) and LocalUpdate (§3.2).
+
+Two shapes of the same math:
+  * list-of-clients (simulator):   ``weight_average([W_1..W_m])``
+  * stacked-clients (pod runtime): params carry a leading client axis G and
+    ``weight_average_stacked`` means over it (lowering to one all-reduce when
+    G is sharded over the mesh's data axis — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+
+PyTree = Any
+
+
+def weight_average(client_params: Sequence[PyTree],
+                   weights: Optional[Sequence[float]] = None) -> PyTree:
+    """Eq. 2: W_G(t) = (1/m) sum_k W_Ck(t) (optionally sample-count weighted,
+    which is McMahan's original formulation)."""
+    m = len(client_params)
+    if weights is None:
+        w = [1.0 / m] * m
+    else:
+        tot = float(sum(weights))
+        w = [float(x) / tot for x in weights]
+    return jax.tree.map(
+        lambda *xs: sum(wi * x for wi, x in zip(w, xs)), *client_params)
+
+
+def weight_average_stacked(stacked: PyTree, axis: int = 0) -> PyTree:
+    return jax.tree.map(lambda x: jnp.mean(x, axis=axis), stacked)
+
+
+def broadcast_to_clients(params: PyTree, num_clients: int) -> PyTree:
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_clients,) + x.shape), params)
+
+
+def local_update(params: PyTree, opt: Optimizer, opt_state: PyTree,
+                 batches: Any, loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+                 ) -> tuple:
+    """§3.2 LocalUpdate: a scan of SGD steps over pre-batched local data.
+    ``batches`` is a pytree whose leaves have a leading steps axis."""
+
+    def step(carry, batch):
+        p, s = carry
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        p, s = opt.apply(grads, s, p)
+        return (p, s), loss
+
+    (params, opt_state), losses = jax.lax.scan(step, (params, opt_state), batches)
+    return params, opt_state, losses
+
+
+def client_drift(client_params: Sequence[PyTree], global_params: PyTree):
+    """Diagnostic: mean L2 distance of client weights from the global model
+    (grows with non-IID skew; useful in EXPERIMENTS.md)."""
+    def dist(cp):
+        sq = sum(jnp.sum((a - b).astype(jnp.float32) ** 2)
+                 for a, b in zip(jax.tree.leaves(cp),
+                                 jax.tree.leaves(global_params)))
+        return jnp.sqrt(sq)
+    return jnp.stack([dist(cp) for cp in client_params]).mean()

@@ -1,0 +1,69 @@
+"""§3.3 MetaTraining: the server trains the UPPER part of the global model on
+the aggregated metadata D_M(t) = U_k D_M_k(t), starting every round from the
+initial upper weights W_G^u(0) (the paper does this deliberately to measure
+metadata effectiveness in isolation; ``reset_upper_each_round=False`` gives
+the warm-start variant we also evaluate).
+
+L2 regularization (paper Tables 6/7) enters as an explicit penalty on the
+upper weights.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer, apply_l2, sgd
+
+PyTree = Any
+
+
+def meta_train(upper_init: PyTree,
+               upper_loss: Callable[[PyTree, Any, Any], jnp.ndarray],
+               acts: jnp.ndarray, targets: Any,
+               *, epochs: int, batch_size: int, lr: float,
+               l2: float = 0.0, key: Optional[jax.Array] = None,
+               valid: Optional[jnp.ndarray] = None,
+               opt: Optional[Optimizer] = None) -> tuple:
+    """Train upper weights on metadata.
+
+    acts:    (M, ...) selected activation maps (all clients aggregated)
+    targets: (M, ...) labels / next-token targets
+    valid:   (M,) bool — invalid rows (empty clusters) get zero loss weight.
+    Returns (trained_upper, losses (epochs*steps,)).
+    """
+    m = acts.shape[0]
+    bs = min(batch_size, m)
+    steps = max(m // bs, 1)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    w = jnp.ones((m,), jnp.float32) if valid is None else valid.astype(jnp.float32)
+    opt = opt or sgd(lr)
+    opt_state = opt.init(upper_init)
+
+    def weighted_loss(p, batch):
+        a, t, bw = batch
+        per = upper_loss(p, a, t)                    # (bs,) per-sample loss
+        loss = (per * bw).sum() / jnp.maximum(bw.sum(), 1.0)
+        return apply_l2(loss, p, l2)
+
+    def epoch_body(carry, ek):
+        p, s = carry
+        perm = jax.random.permutation(ek, m)[:steps * bs]
+        a = acts[perm].reshape((steps, bs) + acts.shape[1:])
+        t = jax.tree.map(
+            lambda x: x[perm].reshape((steps, bs) + x.shape[1:]), targets)
+        bw = w[perm].reshape(steps, bs)
+
+        def step_body(c, batch):
+            p_, s_ = c
+            loss, g = jax.value_and_grad(weighted_loss)(p_, batch)
+            p_, s_ = opt.apply(g, s_, p_)
+            return (p_, s_), loss
+
+        (p, s), losses = jax.lax.scan(step_body, (p, s), (a, t, bw))
+        return (p, s), losses
+
+    (upper, _), losses = jax.lax.scan(
+        epoch_body, (upper_init, opt_state), jax.random.split(key, epochs))
+    return upper, losses.reshape(-1)

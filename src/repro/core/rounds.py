@@ -1,0 +1,129 @@
+"""Algorithm 1 (paper): one global round of Split Training with Metadata
+Selection, at simulator granularity (explicit per-client loop; the pod-scale
+stacked/sharded variant lives in ``repro.core.distributed``).
+
+    for each client k:
+        M_Ck loads W_G(t-1)
+        D_Mk(t)  <- Extract&Selection(D_k, W_G^l(t-1))          # §3.1
+        W_Ck(t)  <- LocalUpdate(D_k, W_G(t-1))                  # §3.2
+    server:
+        D_M(t)   <- U_k D_Mk(t)
+        W_S^u(t) <- MetaTraining(D_M(t), W_G^u(0))              # §3.3
+        M_COM(t) <- ModelCompose(W_G^l(t-1), W_S^u(t))
+        test M_COM(t)
+        W_G(t)   <- WeightAverage(W_Ck(t))                      # Eq. 2
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import fedavg as fa
+from repro.core import meta_training as mt
+from repro.core.selection import Selection, select_metadata
+from repro.core.split import SplitModel
+from repro.data.partition import ClientData
+from repro.fl.comms import CommLedger
+from repro.optim import sgd
+
+PyTree = Any
+
+
+@dataclass
+class RoundResult:
+    global_params: PyTree            # W_G(t)
+    composed_params: PyTree          # M_COM(t)
+    upper_trained: PyTree            # W_S^u(t)
+    metadata_count: int              # |D_M(t)|
+    total_samples: int               # sum_k |D_k|
+    client_losses: List[float] = field(default_factory=list)
+    meta_losses: Optional[np.ndarray] = None
+
+
+def client_round(model: SplitModel, params: PyTree, client: ClientData,
+                 cfg: FLConfig, key: jax.Array, ledger: CommLedger,
+                 num_classes: int):
+    """Client k's work: Extract&Selection + LocalUpdate."""
+    x, y = jnp.asarray(client.data.x), jnp.asarray(client.data.y)
+    k_sel, k_loc = jax.random.split(key)
+
+    # ---- Extract & Selection (uses ONLY the lower part W_G^l(t-1)) ----
+    metadata = None
+    if cfg.use_selection:
+        acts = model.apply_lower(params, x)                       # A_k^[j]
+        sel: Selection = select_metadata(
+            acts, y, k_sel, num_classes=num_classes,
+            clusters_per_class=cfg.clusters_per_class,
+            pca_components=cfg.pca_components,
+            kmeans_iters=cfg.kmeans_iters)
+        sel_acts = jnp.take(acts, sel.indices, axis=0)
+        sel_y = jnp.take(y, sel.indices, axis=0)
+        metadata = (sel_acts, sel_y, sel.valid)
+        ledger.upload("metadata", sel_acts[sel.valid].size * 4
+                      + int(sel.valid.sum()) * 4)
+    else:
+        # Table 2 baseline: ALL activation maps are uploaded.
+        acts = model.apply_lower(params, x)
+        metadata = (acts, y, jnp.ones((x.shape[0],), bool))
+        ledger.upload("metadata", acts.size * 4 + y.size * 4)
+
+    # ---- LocalUpdate ----
+    bs = min(cfg.local_batch_size, x.shape[0])
+    steps_per_epoch = max(x.shape[0] // bs, 1)
+    perm = jax.random.permutation(k_loc, x.shape[0])
+    perm = jnp.tile(perm, cfg.local_epochs)[: cfg.local_epochs * steps_per_epoch * bs]
+    bx = x[perm].reshape((-1, bs) + x.shape[1:])
+    by = y[perm].reshape(-1, bs)
+    opt = sgd(cfg.local_lr)
+    new_params, _, losses = fa.local_update(
+        params, opt, opt.init(params), (bx, by),
+        lambda p, b: model.loss(p, b))
+    ledger.upload("weights", sum(a.size * 4 for a in jax.tree.leaves(new_params)))
+    return new_params, metadata, float(losses.mean())
+
+
+def server_round(model: SplitModel, prev_global: PyTree, upper_init: PyTree,
+                 client_params: List[PyTree], metadatas: List[tuple],
+                 cfg: FLConfig, key: jax.Array) -> RoundResult:
+    """Server's work: aggregate metadata, MetaTraining, ModelCompose, Eq. 2."""
+    acts = jnp.concatenate([m[0] for m in metadatas], 0)
+    ys = jnp.concatenate([m[1] for m in metadatas], 0)
+    valid = jnp.concatenate([m[2] for m in metadatas], 0)
+
+    upper, meta_losses = mt.meta_train(
+        upper_init, model.upper_loss, acts, ys,
+        epochs=cfg.meta_epochs, batch_size=cfg.meta_batch_size,
+        lr=cfg.meta_lr, l2=cfg.meta_l2, key=key, valid=valid)
+
+    # ModelCompose: lower layers from W_G^l(t-1), upper from W_S^u(t)
+    composed = model.merge(model.split(prev_global)[0], upper)
+    new_global = fa.weight_average(client_params)
+    return RoundResult(
+        global_params=new_global, composed_params=composed,
+        upper_trained=upper, metadata_count=int(valid.sum()),
+        total_samples=0, meta_losses=np.asarray(meta_losses))
+
+
+def run_round(model: SplitModel, global_params: PyTree, upper_init: PyTree,
+              clients: List[ClientData], cfg: FLConfig, key: jax.Array,
+              ledger: Optional[CommLedger] = None,
+              num_classes: int = 10) -> RoundResult:
+    ledger = ledger if ledger is not None else CommLedger()
+    keys = jax.random.split(key, len(clients) + 1)
+    client_params, metadatas, losses = [], [], []
+    for c, k in zip(clients, keys[:-1]):
+        p, m, l = client_round(model, global_params, c, cfg, k, ledger,
+                               num_classes)
+        client_params.append(p)
+        metadatas.append(m)
+        losses.append(l)
+    res = server_round(model, global_params, upper_init, client_params,
+                       metadatas, cfg, keys[-1])
+    res.client_losses = losses
+    res.total_samples = sum(len(c.data) for c in clients)
+    return res

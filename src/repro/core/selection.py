@@ -1,0 +1,200 @@
+"""The paper's §3.1: clustered data (metadata) selection.
+
+Pipeline (per client k):
+  activation maps A_k^[j]  --flatten-->  (N, D)
+  PCA to ``pca_components`` features     (N, P)      [16*32*32 -> 200 in paper]
+  K-means per class, ``clusters_per_class`` clusters
+  representative = sample closest (Euclidean) to each cluster centre
+  D_M_k = activation maps of the representatives
+
+Everything is pure JAX with static shapes (empty classes/clusters handled via
+masks), so it jits, vmaps over clients, and lowers inside the distributed
+train step. The K-means assignment step optionally routes through the Pallas
+kernel (``use_pallas=True``; interpret mode on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e30
+
+
+# --------------------------------------------------------------------------
+# PCA
+# --------------------------------------------------------------------------
+class PCAState(NamedTuple):
+    mean: jnp.ndarray          # (D,)
+    components: jnp.ndarray    # (P, D) rows = principal axes
+    explained: jnp.ndarray     # (P,) eigenvalues
+
+
+def pca_fit(x: jnp.ndarray, num_components: int,
+            mask: Optional[jnp.ndarray] = None) -> PCAState:
+    """PCA via the Gram trick when N < D (the paper's regime: a client's few
+    thousand maps vs D=16384), else via the covariance matrix. ``mask`` marks
+    valid rows; invalid rows get zero weight."""
+    n, d = x.shape
+    p = num_components
+    w = jnp.ones((n,), x.dtype) if mask is None else mask.astype(x.dtype)
+    cnt = jnp.maximum(w.sum(), 1.0)
+    mean = (x * w[:, None]).sum(0) / cnt
+    xc = (x - mean) * w[:, None]
+    if n <= d:
+        g = (xc @ xc.T) / cnt                       # (N, N) Gram
+        evals, evecs = jnp.linalg.eigh(g)           # ascending
+        evals, evecs = evals[::-1][:p], evecs[:, ::-1][:, :p]
+        safe = jnp.sqrt(jnp.maximum(evals * cnt, 1e-12))
+        comps = (xc.T @ evecs) / safe               # (D, P) unit-norm cols
+        comps = comps.T
+    else:
+        cov = (xc.T @ xc) / cnt                     # (D, D)
+        evals, evecs = jnp.linalg.eigh(cov)
+        evals, evecs = evals[::-1][:p], evecs[:, ::-1][:, :p]
+        comps = evecs.T
+    return PCAState(mean, comps.astype(x.dtype), evals.astype(x.dtype))
+
+
+def pca_transform(state: PCAState, x: jnp.ndarray) -> jnp.ndarray:
+    return (x - state.mean) @ state.components.T
+
+
+# --------------------------------------------------------------------------
+# K-means (Lloyd, deterministic k-means++-style farthest-point init)
+# --------------------------------------------------------------------------
+class KMeansState(NamedTuple):
+    centroids: jnp.ndarray     # (K, P)
+    assignment: jnp.ndarray    # (N,) int32
+    distances: jnp.ndarray     # (N,) squared dist to own centroid
+    cluster_sizes: jnp.ndarray # (K,)
+
+
+def _pairwise_sq_dists(x: jnp.ndarray, c: jnp.ndarray,
+                       use_pallas: bool = False) -> jnp.ndarray:
+    """(N,P)x(K,P) -> (N,K) squared Euclidean distances.
+    ||x-c||^2 = ||x||^2 + ||c||^2 - 2 x.c — the MXU-friendly form the Pallas
+    kernel implements with centroids resident in VMEM."""
+    if use_pallas:
+        from repro.kernels.ops import kmeans_pairwise_dist
+        return kmeans_pairwise_dist(x, c)
+    x2 = jnp.sum(x * x, -1, keepdims=True)
+    c2 = jnp.sum(c * c, -1)
+    return x2 + c2[None, :] - 2.0 * (x @ c.T)
+
+
+def kmeans_init(x: jnp.ndarray, k: int, key: jax.Array,
+                mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """k-means++-flavoured init: first centre random valid point, then
+    farthest-point (deterministic given key, robust for selection use)."""
+    n = x.shape[0]
+    valid = jnp.ones((n,), bool) if mask is None else mask.astype(bool)
+    logits = jnp.where(valid, 0.0, -jnp.inf)
+    first = jax.random.categorical(key, logits)
+    centroids = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+
+    def body(i, c):
+        d = _pairwise_sq_dists(x, c)                 # (N, K)
+        live = jnp.arange(k) < i
+        d = jnp.where(live[None, :], d, BIG)
+        dmin = jnp.min(d, axis=1)
+        dmin = jnp.where(valid, dmin, -BIG)
+        far = jnp.argmax(dmin)
+        return c.at[i].set(x[far])
+
+    return jax.lax.fori_loop(1, k, body, centroids)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "use_pallas"))
+def kmeans(x: jnp.ndarray, k: int, key: jax.Array, iters: int = 25,
+           mask: Optional[jnp.ndarray] = None,
+           use_pallas: bool = False) -> KMeansState:
+    n = x.shape[0]
+    valid = (jnp.ones((n,), bool) if mask is None else mask.astype(bool))
+    c0 = kmeans_init(x, k, key, mask)
+
+    def step(_, c):
+        d = _pairwise_sq_dists(x, c, use_pallas)
+        d = jnp.where(valid[:, None], d, BIG)
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype) * valid[:, None]
+        counts = onehot.sum(0)                        # (K,)
+        sums = onehot.T @ x                           # (K, P)
+        newc = sums / jnp.maximum(counts, 1.0)[:, None]
+        # keep empty clusters where they were (classic Lloyd behaviour)
+        return jnp.where(counts[:, None] > 0, newc, c)
+
+    c = jax.lax.fori_loop(0, iters, step, c0)
+    d = _pairwise_sq_dists(x, c, use_pallas)
+    d = jnp.where(valid[:, None], d, BIG)
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+    own = jnp.take_along_axis(d, assign[:, None], axis=1)[:, 0]
+    sizes = (jax.nn.one_hot(assign, k) * valid[:, None]).sum(0)
+    return KMeansState(c, assign, own, sizes)
+
+
+def representatives(x: jnp.ndarray, km: KMeansState,
+                    mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Paper: 'within each cluster choose the sample closest in Euclidean
+    distance to the cluster centre'. Returns (K,) indices into x rows
+    (empty cluster -> index of globally nearest valid point, masked later)."""
+    n, k = x.shape[0], km.centroids.shape[0]
+    valid = jnp.ones((n,), bool) if mask is None else mask.astype(bool)
+    d = _pairwise_sq_dists(x, km.centroids)           # (N, K)
+    same = km.assignment[:, None] == jnp.arange(k)[None, :]
+    d = jnp.where(same & valid[:, None], d, BIG)
+    return jnp.argmin(d, axis=0).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Full §3.1 pipeline
+# --------------------------------------------------------------------------
+class Selection(NamedTuple):
+    indices: jnp.ndarray       # (num_classes*K,) indices into the client's data
+    valid: jnp.ndarray         # (num_classes*K,) bool — cluster non-empty
+    features: jnp.ndarray      # (N, P) the PCA features (for diagnostics)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_classes", "clusters_per_class",
+                                    "pca_components", "kmeans_iters",
+                                    "use_pallas", "per_class"))
+def select_metadata(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
+                    key: jax.Array, *, num_classes: int = 10,
+                    clusters_per_class: int = 10, pca_components: int = 200,
+                    kmeans_iters: int = 25, use_pallas: bool = False,
+                    per_class: bool = True) -> Selection:
+    """acts: (N, ...) activation maps at split layer j (flattened internally).
+    labels: (N,) int — paper clusters per class; ``per_class=False`` clusters
+    all samples together (the LM generalization, no labels needed)."""
+    n = acts.shape[0]
+    flat = acts.reshape(n, -1).astype(jnp.float32)
+    p = min(pca_components, n - 1 if n > 1 else 1, flat.shape[1])
+    pca = pca_fit(flat, p)
+    feats = pca_transform(pca, flat)
+
+    if not per_class or labels is None:
+        km = kmeans(feats, clusters_per_class, key, kmeans_iters,
+                    use_pallas=use_pallas)
+        idx = representatives(feats, km)
+        valid = km.cluster_sizes[jnp.arange(clusters_per_class)] > 0
+        return Selection(idx, valid, feats)
+
+    keys = jax.random.split(key, num_classes)
+
+    def one_class(c, k_c):
+        m = labels == c
+        km = kmeans(feats, clusters_per_class, k_c, kmeans_iters,
+                    mask=m, use_pallas=use_pallas)
+        idx = representatives(feats, km, mask=m)
+        return idx, km.cluster_sizes > 0
+
+    idxs, valids = jax.vmap(one_class)(jnp.arange(num_classes), keys)
+    return Selection(idxs.reshape(-1), valids.reshape(-1), feats)
+
+
+def selected_fraction(sel: Selection, n_total: int) -> jnp.ndarray:
+    """The paper's headline metric: |D_M_k| / |D_k| (~0.8% in the paper)."""
+    return sel.valid.sum() / n_total

@@ -1,0 +1,47 @@
+"""The paper's split-network abstraction (§3): a model is partitioned at layer
+``j`` into a lower part W^l (generic features, trained by FedAvg) and an upper
+part W^u (data-characteristic-sensitive, trained server-side on metadata).
+
+A :class:`SplitModel` bundles the five pure functions every backbone must
+provide. Two families implement it:
+  * ``repro.models.wrn.make_split_wrn``            (the paper's WRN-40-1)
+  * ``repro.models.transformer.make_split_lm``     (the 10 assigned archs)
+Both keep layer weights stacked (leading layer axis) so the split is a slice,
+FedAvg averages subtrees, and everything scans/shards.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class SplitModel:
+    """Pure-function bundle. ``params`` is always the FULL model pytree;
+    lower/upper are *views* produced by ``split``/undone by ``merge``."""
+    config: Any
+    split_layer: int
+    init: Callable[[jax.Array], PyTree]
+    apply: Callable[[PyTree, Any], Any]              # full forward -> logits
+    apply_lower: Callable[[PyTree, Any], Any]        # inputs -> activation maps
+    apply_upper: Callable[[PyTree, Any], Any]        # activation maps -> logits
+    split: Callable[[PyTree], Tuple[PyTree, PyTree]]
+    merge: Callable[[PyTree, PyTree], PyTree]
+    loss: Callable[[PyTree, Any], Any]               # full-model training loss
+    upper_loss: Callable[[PyTree, Any, Any], Any]    # (params, acts, targets)
+
+    def compose(self, lower_src: PyTree, upper_src: PyTree) -> PyTree:
+        """Paper §3.3 ModelCompose: lower layers from FedAvg'd W_G^l(t-1),
+        upper layers from metadata-trained W_S^u(t)."""
+        lower, _ = self.split(lower_src)
+        _, upper = self.split(upper_src)
+        return self.merge(lower, upper)
+
+
+def tree_slice_layers(tree: PyTree, start: int, stop: int) -> PyTree:
+    """Slice stacked-layer arrays along axis 0 (used by model split fns)."""
+    return jax.tree.map(lambda x: x[start:stop], tree)

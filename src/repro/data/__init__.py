@@ -1,0 +1,9 @@
+from repro.data.datasets import (SyntheticImageDataset, SyntheticTokenDataset,
+                                 Dataset)
+from repro.data.partition import (partition_k_shards, partition_dirichlet,
+                                  ClientData)
+from repro.data.pipeline import BatchIterator, batched_epoch
+
+__all__ = ["Dataset", "SyntheticImageDataset", "SyntheticTokenDataset",
+           "partition_k_shards", "partition_dirichlet", "ClientData",
+           "BatchIterator", "batched_epoch"]

@@ -1,0 +1,50 @@
+"""Batching pipeline: deterministic shuffled epochs, drop-remainder batching,
+and a stateful iterator usable inside the FL simulator's local-update loop.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+from repro.data.datasets import Dataset
+
+
+def batched_epoch(ds: Dataset, batch_size: int, seed: int = 0,
+                  drop_remainder: bool = True
+                  ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    order = np.random.default_rng(seed).permutation(len(ds))
+    n = (len(ds) // batch_size * batch_size) if drop_remainder else len(ds)
+    for s in range(0, max(n, batch_size if not drop_remainder else 0), batch_size):
+        idx = order[s:s + batch_size]
+        if len(idx) == 0:
+            break
+        yield ds.x[idx], ds.y[idx]
+
+
+class BatchIterator:
+    """Endless epoch-shuffled batches; tracks epoch/step for checkpoint resume."""
+
+    def __init__(self, ds: Dataset, batch_size: int, seed: int = 0):
+        if len(ds) < batch_size:
+            # small clients: sample with replacement up to a full batch
+            rng = np.random.default_rng(seed)
+            idx = rng.choice(len(ds), batch_size, replace=True)
+            ds = ds.subset(idx)
+        self.ds, self.batch_size, self.seed = ds, batch_size, seed
+        self.epoch, self._iter = 0, None
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._iter is None:
+            self._iter = batched_epoch(self.ds, self.batch_size,
+                                       self.seed + self.epoch)
+        try:
+            return next(self._iter)
+        except StopIteration:
+            self.epoch += 1
+            self._iter = batched_epoch(self.ds, self.batch_size,
+                                       self.seed + self.epoch)
+            return next(self._iter)

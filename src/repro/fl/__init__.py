@@ -1,0 +1,17 @@
+from repro.fl.comms import CommLedger
+
+__all__ = ["CommLedger", "FLSimulation", "SimulationResult", "FLClient",
+           "FLServer"]
+
+
+def __getattr__(name):   # lazy: simulation imports core.rounds (cycle guard)
+    if name in ("FLSimulation", "SimulationResult"):
+        from repro.fl import simulation
+        return getattr(simulation, name)
+    if name == "FLClient":
+        from repro.fl.client import FLClient
+        return FLClient
+    if name == "FLServer":
+        from repro.fl.server import FLServer
+        return FLServer
+    raise AttributeError(name)

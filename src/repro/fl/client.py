@@ -1,0 +1,38 @@
+"""Client role: owns local data, executes Extract&Selection + LocalUpdate.
+
+The simulator drives many FLClient objects in-process; the pod runtime maps
+cohorts of clients onto mesh shards instead (repro.core.distributed). A
+simple cost model estimates local wall-time so straggler behaviour (the
+paper's motivation) can be simulated and reported."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+
+from repro.configs.base import FLConfig
+from repro.core.rounds import client_round
+from repro.core.split import SplitModel
+from repro.data.partition import ClientData
+from repro.fl.comms import CommLedger
+
+
+@dataclass
+class FLClient:
+    client: ClientData
+    compute_speed: float = 1.0       # relative FLOP/s (heterogeneous hardware)
+
+    def local_time(self, cfg: FLConfig, flops_per_sample: float) -> float:
+        """Estimated local round time: epochs * |D_k| * flops / speed.
+        Selection adds one lower-forward over |D_k| (still ~3x cheaper than a
+        training epoch) — the quantity the paper reduces."""
+        n = len(self.client.data)
+        train = cfg.local_epochs * n * 3 * flops_per_sample
+        select = n * flops_per_sample if cfg.use_selection else 0
+        return (train + select) / (self.compute_speed * 1e9)
+
+    def run(self, model: SplitModel, params: Any, cfg: FLConfig,
+            key: jax.Array, ledger: CommLedger, num_classes: int):
+        return client_round(model, params, self.client, cfg, key, ledger,
+                            num_classes)

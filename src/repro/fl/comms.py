@@ -1,0 +1,38 @@
+"""Communication accounting — the paper's efficiency claim made measurable.
+
+Every client->server (upload) and server->client (download) transfer is
+logged by category; ``summary()`` yields the bytes table used by the
+communication benchmark (metadata bytes with selection vs without is the
+paper's '<1% of the data' claim)."""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+
+@dataclass
+class CommLedger:
+    up: dict = field(default_factory=lambda: defaultdict(int))
+    down: dict = field(default_factory=lambda: defaultdict(int))
+
+    def upload(self, category: str, nbytes: int):
+        self.up[category] += int(nbytes)
+
+    def download(self, category: str, nbytes: int):
+        self.down[category] += int(nbytes)
+
+    @property
+    def total_up(self) -> int:
+        return sum(self.up.values())
+
+    @property
+    def total_down(self) -> int:
+        return sum(self.down.values())
+
+    def summary(self) -> dict:
+        return {"up": dict(self.up), "down": dict(self.down),
+                "total_up": self.total_up, "total_down": self.total_down}
+
+    def reset(self):
+        self.up.clear()
+        self.down.clear()

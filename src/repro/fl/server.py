@@ -1,0 +1,43 @@
+"""Server role: client sampling, metadata aggregation + MetaTraining +
+ModelCompose + WeightAverage, deadline/straggler policy."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.rounds import server_round, RoundResult
+from repro.core.split import SplitModel
+from repro.fl.comms import CommLedger
+
+PyTree = Any
+
+
+@dataclass
+class FLServer:
+    model: SplitModel
+    global_params: PyTree
+    upper_init: PyTree                      # W_G^u(0), reused every round (§3.3)
+    cfg: FLConfig
+    round_idx: int = 0
+    deadline: Optional[float] = None        # seconds; None = wait for all
+    ledger: CommLedger = field(default_factory=CommLedger)
+
+    def sample_clients(self, num_available: int, key: jax.Array) -> np.ndarray:
+        m = min(self.cfg.clients_per_round, num_available)
+        return np.asarray(
+            jax.random.choice(key, num_available, (m,), replace=False))
+
+    def aggregate(self, client_params: List[PyTree], metadatas: List[tuple],
+                  key: jax.Array) -> RoundResult:
+        res = server_round(self.model, self.global_params, self.upper_init,
+                           client_params, metadatas, self.cfg, key)
+        self.global_params = res.global_params
+        self.round_idx += 1
+        # server -> clients: next round's global weights
+        nbytes = sum(a.size * 4 for a in jax.tree.leaves(self.global_params))
+        self.ledger.download("weights", nbytes * len(client_params))
+        return res

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: flash-decode — ONE query token against a long
+(ring-buffer) KV cache. This is the decode_32k / long_500k hot spot: at 500k
+context the op is pure HBM bandwidth (stream 2*S*D bytes of K/V per kv-head),
+so the kernel's job is to keep the streaming dense and the softmax online.
+
+TPU mapping: grid (batch*kv_head, s_block), s innermost; K/V stream through
+VMEM one (block_s, D) tile per step; the G = H/KV query heads ride as rows of
+a (G, D) VMEM-resident tile so the score matmul (G x D)@(D x block_s) feeds
+the MXU. Accumulators (acc (G,D), m, l) carry in VMEM scratch across
+s-blocks. Ring-buffer validity is a prefetched (block_s,) int mask.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float,
+                   num_s_blocks: int):
+    sb = pl.program_id(1)
+
+    @pl.when(sb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                              # (G, D)
+    k = k_ref[0]                              # (block_s, D)
+    v = v_ref[0]
+    valid = valid_ref[0]                      # (block_s,) int32
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where((valid > 0)[None, :], s, NEG)      # (G, block_s)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(sb == num_s_blocks - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode_kernel(q, k_cache, v_cache, valid, *, block_s: int = 1024,
+                        interpret: bool = False):
+    """q: (B,1,H,D); k_cache,v_cache: (B,S,KV,D); valid: (B,S) bool.
+    S % block_s == 0 (ops.py pads, padding marked invalid). -> (B,1,H,D)."""
+    b, _, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    block_s = min(block_s, s)
+    assert s % block_s == 0
+    scale = 1.0 / math.sqrt(d)
+
+    qr = q.reshape(b, kv, g, d).reshape(b * kv, g, d)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(b * kv, s, d)
+    vm = jnp.repeat(valid.astype(jnp.int32), kv, axis=0)     # (B*KV, S)
+
+    grid = (b * kv, s // block_s)
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               num_s_blocks=s // block_s)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda bh, sb: (bh, 0, 0)),
+            pl.BlockSpec((1, block_s, d), lambda bh, sb: (bh, sb, 0)),
+            pl.BlockSpec((1, block_s, d), lambda bh, sb: (bh, sb, 0)),
+            pl.BlockSpec((1, block_s), lambda bh, sb: (bh, sb)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda bh, sb: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr, vm)
+    return out.reshape(b, 1, h, d)

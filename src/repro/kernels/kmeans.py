@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: K-means pairwise squared-distance (the paper's §3.1
+selection hot spot — run every round on every client over all local samples).
+
+TPU mapping: ||x-c||^2 = ||x||^2 + ||c||^2 - 2 x.c — the -2x.c term is a
+(block_n x D) @ (D x K) matmul on the MXU; the norms ride on the VPU. The
+full centroid set (K x D) is VMEM-resident across the whole grid (index_map
+pins it to block (0,0)); x is streamed HBM->VMEM one n-block at a time.
+
+Alignment: D and K are padded by ops.py to lane multiples (128); block_n is a
+sublane multiple (8 for f32). VMEM claim per grid cell:
+  block_n*D + K*D + block_n*K floats  (e.g. 256*256 + 128*256 + 256*128 ≈ 0.5 MB)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kmeans_dist_kernel(x_ref, c_ref, out_ref):
+    x = x_ref[...]                           # (block_n, D)
+    c = c_ref[...]                           # (K, D)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)            # (block_n, 1)
+    c2 = jnp.sum(c * c, axis=1)                           # (K,)
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    out_ref[...] = x2 + c2[None, :] - 2.0 * xc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_pairwise_dist_kernel(x: jnp.ndarray, c: jnp.ndarray,
+                                block_n: int = 256,
+                                interpret: bool = False) -> jnp.ndarray:
+    """x: (N, D) f32, c: (K, D) f32, N % block_n == 0, D/K lane-aligned
+    (ops.kmeans_pairwise_dist handles padding). Returns (N, K) f32."""
+    n, d = x.shape
+    k = c.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kmeans_dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),   # stream x blocks
+            pl.BlockSpec((k, d), lambda i: (0, 0)),         # centroids resident
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(x, c)

@@ -1,0 +1,78 @@
+"""jit'd public wrappers around the Pallas kernels: shape padding/alignment,
+CPU interpret-mode fallback (this container), and the dispatch points the
+model/selection code calls."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import flash_decode_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.kmeans import kmeans_pairwise_dist_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def kmeans_pairwise_dist(x: jnp.ndarray, c: jnp.ndarray,
+                         block_n: int = 256) -> jnp.ndarray:
+    """(N,D),(K,D) -> (N,K). Pads N to block_n, D and K to lane width 128.
+    Distance is padding-invariant in D (zeros contribute 0); padded centroids
+    are sliced away; padded rows dropped."""
+    n, d = x.shape
+    k = c.shape[0]
+    if n < 64:   # tiny problems: the jnp path is faster than kernel overhead
+        return ref.kmeans_pairwise_dist_ref(x, c)
+    npad = _pad_to(n, block_n)
+    dpad = _pad_to(d, 128)
+    kpad = _pad_to(k, 128)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, npad - n), (0, dpad - d)))
+    cp = jnp.pad(c.astype(jnp.float32), ((0, kpad - k), (0, dpad - d)))
+    out = kmeans_pairwise_dist_kernel(xp, cp, block_n=block_n,
+                                      interpret=_interpret())
+    return out[:n, :k]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 512) -> jnp.ndarray:
+    """(B,S,H,D) GQA flash attention. Pads S to block multiples (key padding
+    masked by seq_len inside the kernel; query padding rows sliced away) and
+    D to 128 lanes (zero-padded D leaves logits unchanged)."""
+    b, s, h, d = q.shape
+    blk = min(block_q, block_k, _pad_to(s, 128))
+    spad = _pad_to(s, blk)
+    dpad = _pad_to(d, 128)
+    pad4 = lambda t: jnp.pad(t, ((0, 0), (0, spad - s), (0, 0), (0, dpad - d)))
+    qp, kp, vp = pad4(q), pad4(k), pad4(v)
+    # scale uses original d: kernel scales by 1/sqrt(dpad) — compensate
+    qp = qp * (dpad / d) ** 0.5
+    out = flash_attention_kernel(qp, kp, vp, causal=causal, window=window,
+                                 block_q=min(block_q, spad),
+                                 block_k=min(block_k, spad),
+                                 interpret=_interpret())
+    return out[:, :s, :, :d]
+
+
+def flash_decode(q, k_cache, v_cache, valid, *, block_s: int = 1024
+                 ) -> jnp.ndarray:
+    """(B,1,H,D) x (B,S,KV,D) ring-buffer decode attention."""
+    b, _, h, d = q.shape
+    s = k_cache.shape[1]
+    blk = min(block_s, _pad_to(s, 128))
+    spad = _pad_to(s, blk)
+    dpad = _pad_to(d, 128)
+    padc = lambda t: jnp.pad(t, ((0, 0), (0, spad - s), (0, 0), (0, dpad - d)))
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, dpad - d))) * (dpad / d) ** 0.5
+    kp, vp = padc(k_cache), padc(v_cache)
+    vm = jnp.pad(valid, ((0, 0), (0, spad - s)))
+    out = flash_decode_kernel(qp, kp, vp, vm, block_s=blk,
+                              interpret=_interpret())
+    return out[..., :d]

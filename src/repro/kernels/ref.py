@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def kmeans_pairwise_dist_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """(N,D),(K,D) -> (N,K) squared Euclidean distances."""
+    x2 = jnp.sum(x * x, -1, keepdims=True)
+    c2 = jnp.sum(c * c, -1)
+    return x2 + c2[None, :] - 2.0 * (x @ c.T)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """(B,S,H,D) x (B,S,KV,D)^2 -> (B,S,H,D); GQA via head repeat."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask[None, None], s, NEG)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v)
+
+
+def flash_decode_ref(q, k_cache, v_cache, valid):
+    """q:(B,1,H,D) caches:(B,S,KV,D) valid:(B,S) -> (B,1,H,D)."""
+    b, _, h, d = q.shape
+    kv = k_cache.shape[2]
+    rep = h // kv
+    if rep > 1:
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache).astype(jnp.float32)
+    s = s / math.sqrt(d)
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v_cache)

@@ -1,0 +1,2 @@
+# NOTE: deliberately empty of jax imports — dryrun.py must set XLA_FLAGS
+# before anything touches jax.

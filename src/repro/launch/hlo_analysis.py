@@ -1,0 +1,287 @@
+"""Post-SPMD HLO cost model with while-loop trip-count expansion.
+
+XLA's compiled.cost_analysis() on the CPU backend does NOT multiply while-
+loop bodies by their trip counts, so a lax.scan over 34 layers counts one
+layer of FLOPs. This module re-derives, from compiled.as_text():
+
+  * flops        — 2*prod(out)*contract for every dot (matmuls dominate all
+                   models here), expanded through while/call/fusion edges;
+  * bytes        — per-op operand+output bytes (fusion internals excluded:
+                   a fusion op touches HBM only at its boundary), expanded;
+  * collectives  — all-gather / all-reduce / reduce-scatter / all-to-all /
+                   collective-permute operand bytes by kind, expanded.
+
+The compiled module is the PER-PARTITION program, so all numbers are
+per-device — exactly what the roofline terms want.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "f8e4m3b11fnuz": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops that move no HBM bytes of their own
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# type part may contain tuple element comments like /*index=5*/; the op name
+# is the first space-preceded word(...) after the '=' (layout tiling ':T(..)'
+# is colon-preceded, so it can't false-match).
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _TYPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    edges: List[Tuple[str, float, bool]] = field(default_factory=list)
+    # (callee, mult, is_fusion): fusion children contribute flops only
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+    unknown_trips: int = 0
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "transcendentals": self.transcendentals,
+                "collective_bytes": self.collective_total,
+                "coll_bytes_by_kind": dict(self.coll_bytes),
+                "coll_count_by_kind": dict(self.coll_count),
+                "unknown_trip_counts": self.unknown_trips}
+
+
+def _dot_flops(out_type: str, args: str, symtab: Dict[str, str],
+               line: str) -> float:
+    out = _first_shape(out_type)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    # contraction size from lhs operand dims
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    ops = [a.strip().lstrip("%") for a in args.split("),")[0].split(",")]
+    contract = 1
+    if m and ops:
+        lhs_type = symtab.get(ops[0])
+        if lhs_type:
+            sh = _first_shape(lhs_type)
+            if sh:
+                dims = sh[1]
+                for i in m.group(1).split(","):
+                    if i != "" and int(i) < len(dims):
+                        contract *= dims[int(i)]
+    return 2.0 * out_n * max(contract, 1)
+
+
+def _conv_flops(out_type: str, line: str, symtab, args) -> float:
+    out = _first_shape(out_type)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    m = re.search(r"window=\{size=([\dx]+)", line)
+    spatial = 1
+    if m:
+        for s in m.group(1).split("x"):
+            spatial *= int(s)
+    ops = [a.strip().lstrip("%") for a in args.split("),")[0].split(",")]
+    cin = 1
+    if len(ops) > 1 and ops[1] in symtab:
+        sh = _first_shape(symtab[ops[1]])
+        if sh and len(sh[1]) >= 3:
+            cin = sh[1][-2]   # HWIO kernel: I dim
+    return 2.0 * out_n * spatial * cin
+
+
+def parse_hlo(text: str) -> HloCost:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    symtab: Dict[str, str] = {}
+    unknown_trips = 0
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and (line.endswith("{") or "{" in line.split("->")[-1]):
+            cur = _Comp(hdr.group(2))
+            comps[cur.name] = cur
+            symtab = {}
+            if hdr.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, out_type, op, rest = m.groups()
+        symtab[name] = out_type
+
+        if op in _FREE_OPS:
+            continue
+
+        out_b = _type_bytes(out_type)
+        arg_names = re.findall(r"%([\w\.\-]+)", rest.split(")", 1)[0])
+        in_b = sum(_type_bytes(symtab.get(a, "")) for a in arg_names)
+
+        if op == "fusion":
+            cur.bytes += out_b + in_b
+            mcal = re.search(r"calls=%?([\w\.\-]+)", line)
+            if mcal:
+                cur.edges.append((mcal.group(1), 1.0, True))
+            continue
+        if op == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            mt = re.search(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"', line)
+            trip = int(mt.group(1)) if mt else None
+            if trip is None:
+                trip = 1
+                unknown_trips += 1
+            if mb:
+                cur.edges.append((mb.group(1), float(trip), False))
+            if mc:
+                cur.edges.append((mc.group(1), float(trip), False))
+            continue
+        if op in ("call", "custom-call", "conditional", "async-start"):
+            for mcal in re.finditer(
+                    r"(?:to_apply|called_computations=\{?)%?([\w\.\-]+)", line):
+                cur.edges.append((mcal.group(1), 1.0, False))
+            cur.bytes += out_b + in_b
+            continue
+
+        is_coll = False
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                cur.coll_bytes[c] += out_b
+                cur.coll_count[c] += 1
+                cur.bytes += out_b + in_b
+                is_coll = True
+                break
+        if is_coll:
+            continue
+
+        if op == "dot":
+            cur.flops += _dot_flops(out_type, rest, symtab, line)
+            cur.bytes += out_b + in_b
+            continue
+        if op == "convolution":
+            cur.flops += _conv_flops(out_type, line, symtab, rest)
+            cur.bytes += out_b + in_b
+            continue
+        if op in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                  "logistic", "sine", "cosine"):
+            n = _type_bytes(out_type) // 4 or 1
+            cur.transcendentals += n
+        # everything else: elementwise / reduce / dynamic-slice etc.
+        cur.bytes += out_b + in_b
+
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    # accumulate with memoized recursion
+    memo: Dict[str, Tuple[float, float, float, dict, dict]] = {}
+
+    def total(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 64:
+            return (0.0, 0.0, 0.0, {}, {})
+        fl, by, tr = c.flops, c.bytes, c.transcendentals
+        cb = dict(c.coll_bytes)
+        cc = dict(c.coll_count)
+        for callee, mult, is_fusion in c.edges:
+            if callee == name:
+                continue
+            f2, b2, t2, cb2, cc2 = total(callee, depth + 1)
+            fl += f2 * mult
+            tr += t2 * mult
+            if not is_fusion:
+                by += b2 * mult
+                for k, v in cb2.items():
+                    cb[k] = cb.get(k, 0.0) + v * mult
+                for k, v in cc2.items():
+                    cc[k] = cc.get(k, 0) + int(v * mult)
+        memo[name] = (fl, by, tr, cb, cc)
+        return memo[name]
+
+    fl, by, tr, cb, cc = total(entry) if entry else (0, 0, 0, {}, {})
+    return HloCost(flops=fl, bytes=by, transcendentals=tr, coll_bytes=cb,
+                   coll_count=cc, unknown_trips=unknown_trips)
+
+
+# backwards-compatible helpers -------------------------------------------
+@dataclass
+class CollectiveStats:
+    cost: HloCost
+
+    @property
+    def total_bytes(self):
+        return self.cost.collective_total
+
+    def as_dict(self):
+        return {"total_bytes": self.cost.collective_total,
+                "bytes_by_kind": dict(self.cost.coll_bytes),
+                "count_by_kind": dict(self.cost.coll_count),
+                "unknown_trip_counts": self.cost.unknown_trips}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    return CollectiveStats(parse_hlo(hlo_text))

@@ -1,0 +1,34 @@
+"""Production mesh builders. Defined as FUNCTIONS so importing this module
+never touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init).
+
+Production target: TPU v5e, 256 chips/pod (16x16), optionally 2 pods.
+  axes: data (batch / federated cohorts / FSDP), model (tensor/expert), pod.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(*, multi_pod: bool = False):
+    """Tiny mesh for CI on a handful of host devices (2x2 or 2x2x2...)."""
+    n = len(jax.devices())
+    if multi_pod and n >= 8:
+        return jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    if n >= 4:
+        return jax.make_mesh((2, 2), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) — used by the roofline report.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link (~per-chip effective)
+HBM_BYTES = 16 * 1024 ** 3        # 16 GiB
+VMEM_BYTES = 128 * 1024 ** 2

@@ -1,0 +1,77 @@
+"""Batched decode serving launcher: prefill a batch of prompts, then decode
+with the (ring-buffer) KV cache under jit. --smoke runs a reduced config on
+the smoke mesh with real execution (this container); without --smoke it
+expects the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+    from repro.launch.steps import make_decode_step
+    from repro.models.transformer import LM
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+        mesh = make_smoke_mesh()
+    else:
+        mesh = make_production_mesh()
+
+    decode_fn, lm = make_decode_step(cfg)
+    with mesh:
+        params = lm.init(jax.random.PRNGKey(0))
+        cache = lm.init_cache(args.batch, args.cache_len)
+        if cfg.is_encoder_decoder:
+            cache["enc_out"] = jnp.zeros(
+                (args.batch, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+        jit_decode = jax.jit(decode_fn)
+
+        rng = np.random.default_rng(0)
+        # "prefill" by teacher-forcing the prompt through decode steps (keeps
+        # one compiled program; a production server uses the prefill step)
+        prompt = rng.integers(0, cfg.vocab_size,
+                              (args.batch, args.prompt_len), np.int32)
+        t0 = time.time()
+        tok = jnp.asarray(prompt[:, :1])
+        for i in range(1, args.prompt_len):
+            _, cache = jit_decode(params, cache, tok)
+            tok = jnp.asarray(prompt[:, i:i + 1])
+        t_prefill = time.time() - t0
+
+        out = []
+        t0 = time.time()
+        for _ in range(args.tokens):
+            tok, cache = jit_decode(params, cache, tok)
+            out.append(np.asarray(tok)[:, 0])
+        dt = time.time() - t0
+        out = np.stack(out, 1)
+    print(f"prompt fed in {t_prefill:.2f}s; generated {args.tokens} tokens x "
+          f"batch {args.batch} in {dt:.2f}s "
+          f"({args.tokens*args.batch/max(dt,1e-9):.1f} tok/s)")
+    print("sample token ids:", out[0][:16].tolist())
+    print("serve: done")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

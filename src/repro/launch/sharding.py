@@ -1,0 +1,323 @@
+"""Sharding planner: maps every param/batch/cache leaf to a PartitionSpec for
+the production mesh, by leaf name + divisibility checks (DESIGN.md §6).
+
+Strategies:
+  * tp    — tensor parallel on "model" (column/row-parallel per leaf kind);
+            experts on "model" for MoE. Used by every mode.
+  * fsdp  — additionally shard a second dim over "data" for the huge archs
+            (jamba 398B, deepseek 236B) so weights fit HBM; GSPMD inserts the
+            FSDP all-gathers automatically.
+  * fed   — stacked-clients axis (leading G) over "data" (and/or "pod") for
+            the paper's FedAvg train step.
+
+Anything non-divisible falls back to replication (recorded in the plan so
+EXPERIMENTS.md can report what replicated and why).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+FSDP_THRESHOLD = 40e9   # params; above this weights also shard over "data"
+
+# leaf-name -> (col_dims, row_dims): which dims prefer model-axis sharding.
+# col = output/feature dim, row = reduction dim (row-parallel => psum).
+_COL = {"wq", "wk", "wv", "wg", "cwq", "cwk", "cwv", "w_gate", "w_up",
+        "ws_gate", "ws_up", "w_uq", "w_uk", "w_uv", "w_in", "w_dt",
+        "w_decay2", "wr", "lm_head", "wk_ffn"}
+_ROW = {"wo", "cwo", "w_down", "ws_down", "w_out", "w_x", "wv_ffn"}
+_EXPERT = {"we_gate", "we_up", "we_down"}
+_REPLICATE = {"router", "w_dq", "w_dkv", "w_kr", "q_norm", "kv_norm",
+              "conv_w", "conv_b", "bonus", "mu_r", "mu_k", "mu_v", "mu_w",
+              "mu_g", "w_decay1", "decay_bias", "dt_bias", "A_log", "D",
+              "ln_x", "norm", "cross_norm", "final_norm", "enc_norm", "proj",
+              "scale", "bias", "fc_b", "bq", "bk", "bv"}
+
+
+@dataclass
+class Plan:
+    mesh: Mesh
+    params: PyTree                   # PartitionSpec tree matching params
+    replicated: List[str] = field(default_factory=list)
+    notes: List[str] = field(default_factory=list)
+
+    def shardings(self) -> PyTree:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.params,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            return k
+    return ""
+
+
+def _prefix_depth(path) -> int:
+    """Number of leading stacking axes: stage params live under
+    params['stages'][si][unit_pos] -> scan stages have a repeats axis."""
+    # path looks like ('stages', si, unit_pos, 'mixer'/'ffn', leafname)
+    return 0
+
+
+def plan_params(cfg: ModelConfig, mesh: Mesh, params_shapes: PyTree, *,
+                fed_axes: Optional[Tuple[str, ...]] = None,
+                fsdp: Optional[bool] = None,
+                head_aware: bool = True,
+                scan_stage_ids: Optional[set] = None) -> Plan:
+    """Build PartitionSpecs for a params pytree (of ShapeDtypeStructs).
+
+    fed_axes:   mesh axes carrying the stacked-clients axis (train mode); the
+                params tree is then expected to have that extra LEADING axis.
+    fsdp:       shard a second weight dim over "data" (default: auto by size).
+    head_aware: replicate attention weights when heads don't divide the model
+                axis (avoids fractional-head SPMD rematerialization). Right
+                for inference and for seq-sharded-activation training; WRONG
+                for plain training (replicated attention = model-axis-times
+                the attention compute per device) — see §Perf H2/G iterations.
+    """
+    m = _axis_size(mesh, "model")
+    d_axis = _axis_size(mesh, "data")
+    if fsdp is None:
+        from repro.models.registry import count_params
+        fsdp = count_params(cfg) > FSDP_THRESHOLD
+    use_data_dim = fsdp and "data" not in (fed_axes or ())
+    plan = Plan(mesh, None)
+    if fsdp:
+        plan.notes.append("fsdp: second weight dim sharded over 'data'")
+
+    def spec_for(path, leaf) -> P:
+        shape = tuple(leaf.shape)
+        name = _leaf_name(path)
+        pathstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+        # rwkv channel-mix reuses wk/wv/wr names with transposed roles
+        if "ffn" in pathstr and name in ("wk", "wv", "wr"):
+            name = {"wk": "wk_ffn", "wv": "wv_ffn", "wr": "wr_ffn"}[name]
+        # how many leading stacking axes does this leaf carry?
+        nstack = len(shape) - _base_ndim(cfg, name)
+        nstack = max(nstack, 0)
+        base = list(_base_spec(cfg, name, shape[nstack:], m,
+                               d_axis if use_data_dim else 0, plan,
+                               head_aware=head_aware))
+        spec = [None] * nstack + base
+        if fed_axes:
+            # leading axis 0 is the client/cohort axis
+            spec[0] = fed_axes if len(fed_axes) > 1 else fed_axes[0]
+        return P(*spec)
+
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    specs = {}
+    leaves = []
+    for path, leaf in flat:
+        leaves.append(spec_for(path, leaf))
+    treedef = jax.tree_util.tree_structure(params_shapes)
+    plan.params = jax.tree_util.tree_unflatten(treedef, leaves)
+    return plan
+
+
+def _base_ndim(cfg: ModelConfig, name: str) -> int:
+    """ndim of the leaf BEFORE any stacking (scan repeats / client axis)."""
+    if name in _EXPERT:
+        return 3
+    if name in ("embed", "lm_head", "fc_w", "embed_head"):
+        return 2
+    if name in _COL | _ROW | {"w_decay1", "w_dkv", "w_kr", "w_dq", "proj",
+                              "wr_ffn"}:
+        return 2
+    if name in ("conv_w", "A_log", "bonus"):
+        return 2
+    if name in ("conv_in", "conv1", "conv2", "shortcut"):
+        return 4
+    return 1   # norms, biases, mus
+
+
+_ATTN_HEADED = {"wq", "cwq", "wg", "wr", "bq"}       # q/gate: num_heads-shaped
+_ATTN_KV_HEADED = {"wk", "wv", "cwk", "cwv", "bk", "bv"}  # kv-heads-shaped
+_ATTN_OUT = {"wo", "cwo"}
+
+
+def _base_spec(cfg: ModelConfig, name: str, shape, m: int, d_axis: int,
+               plan: Plan, head_aware: bool = True):
+    """PartitionSpec dims for the unstacked leaf."""
+    def div(i, ax):
+        return ax > 1 and shape[i] % ax == 0
+
+    # Head-aware rule (EXPERIMENTS.md §Perf H2): sharding the FLAT h*hd dim
+    # when heads don't divide the axis puts fractional heads on each device;
+    # every (b,s,h,hd) reshape then forces SPMD full rematerialization and
+    # GB-scale all-gathers. Replicating attention weights is strictly better
+    # for those archs (gemma3 8H, phi3 40H, qwen2 14H, rwkv6 40H vs 16-wide
+    # model axis) in inference / seq-sharded training; FFN/vocab still shard.
+    if head_aware:
+        heads_ok = cfg.num_heads % m == 0
+        kv_ok = cfg.num_kv_heads % m == 0
+        if ((name in _ATTN_HEADED and not heads_ok)
+                or (name in _ATTN_KV_HEADED and not kv_ok)
+                or (name in _ATTN_OUT and not heads_ok)):
+            plan.replicated.append(name)
+            return [None] * len(shape)
+
+    dims = [None] * len(shape)
+    if name in ("embed", "embed_head"):
+        if div(0, m):
+            dims[0] = "model"
+        if d_axis and div(1, d_axis):
+            dims[1] = "data"
+        return dims
+    if name in ("lm_head", "fc_w"):
+        if div(1, m):
+            dims[1] = "model"
+        if d_axis and div(0, d_axis):
+            dims[0] = "data"
+        return dims
+    if name in _EXPERT:
+        if div(0, m):
+            dims[0] = "model"                 # expert parallelism
+        if d_axis and div(1, d_axis):
+            dims[1] = "data"                  # fsdp on d_model dim
+        return dims
+    if name in _COL and len(shape) == 2:
+        if div(1, m):
+            dims[1] = "model"
+        else:
+            plan.replicated.append(name)
+        if d_axis and div(0, d_axis):
+            dims[0] = "data"
+        return dims
+    if name in _ROW and len(shape) == 2:
+        if div(0, m):
+            dims[0] = "model"
+        else:
+            plan.replicated.append(name)
+        if d_axis and div(1, d_axis):
+            dims[1] = "data"
+        return dims
+    # conv / norms / biases / everything else: replicate
+    return dims
+
+
+# --------------------------------------------------------------------------
+# batch & cache specs
+# --------------------------------------------------------------------------
+def batch_spec(mesh: Mesh, *, fed_axes: Tuple[str, ...] = (),
+               batch_axes: Tuple[str, ...] = ("data",)) -> P:
+    """Spec builder for (G?, steps?, B, ...) shaped batches is done in
+    specs.py; this returns the batch-dim axes tuple usable there."""
+    avail = [a for a in batch_axes if _axis_size(mesh, a) > 1]
+    return tuple(avail)
+
+
+def cache_plan(cfg: ModelConfig, mesh: Mesh, cache_shapes: PyTree,
+               batch: int, seq_shard: bool = False) -> PyTree:
+    """KV/SSM cache PartitionSpecs. Batch dim over 'data' (and 'pod') when it
+    divides; batch==1 (long_500k) -> shard the SEQUENCE dim over 'data'
+    instead (sequence-parallel cache; DESIGN.md §6). kv-head/latent dims over
+    'model' when divisible.
+
+    seq_shard=True (the §Perf H2 optimization): shard the cache SEQUENCE dim
+    over 'model' instead of splitting kv-heads/head-dim. Decode attention
+    then reduces over the sharded seq dim (psum of softmax stats + a tiny
+    per-layer output psum) instead of resharding fractional heads."""
+    m = _axis_size(mesh, "model")
+    d_axis = _axis_size(mesh, "data")
+    p_axis = _axis_size(mesh, "pod")
+    bdims: Tuple[str, ...] = ()
+    if p_axis > 1 and batch % (d_axis * p_axis) == 0:
+        bdims = ("pod", "data")
+    elif batch % d_axis == 0 and d_axis > 1:
+        bdims = ("data",)
+
+    def _bspec(s, off):
+        if bdims:
+            s[off] = bdims if len(bdims) > 1 else bdims[0]
+
+    def spec(path, leaf):
+        shape = tuple(leaf.shape)
+        name = _leaf_name(path)
+        if name == "pos":
+            return P()
+        if name in ("k", "v"):                 # (stack?, B, S, KV, HD)
+            off = len(shape) - 4
+            s = [None] * len(shape)
+            _bspec(s, off)
+            if seq_shard and shape[off + 1] % m == 0:
+                s[off + 1] = "model"
+                if not bdims and shape[off + 1] % (m * d_axis) == 0:
+                    s[off + 1] = ("data", "model")
+            else:
+                if not bdims and shape[off + 1] % d_axis == 0:
+                    s[off + 1] = "data"
+                if shape[off + 2] % m == 0:
+                    s[off + 2] = "model"
+                elif shape[off + 3] % m == 0:
+                    s[off + 3] = "model"
+            return P(*s)
+        if name in ("c_kv", "k_rope"):         # (stack?, B, S, R)
+            off = len(shape) - 3
+            s = [None] * len(shape)
+            _bspec(s, off)
+            if seq_shard and shape[off + 1] % m == 0:
+                s[off + 1] = "model"
+                if not bdims and shape[off + 1] % (m * d_axis) == 0:
+                    s[off + 1] = ("data", "model")
+            else:
+                if not bdims and shape[off + 1] % d_axis == 0:
+                    s[off + 1] = "data"
+                if name == "c_kv" and shape[off + 2] % m == 0:
+                    s[off + 2] = "model"
+            return P(*s)
+        if name == "ssm":                      # (stack?, B, DI, ST)
+            off = len(shape) - 3
+            s = [None] * len(shape)
+            if bdims:
+                s[off] = bdims if len(bdims) > 1 else bdims[0]
+            if shape[off + 1] % m == 0:
+                s[off + 1] = "model"
+            return P(*s)
+        if name == "conv":                     # (stack?, B, CW-1, DI)
+            off = len(shape) - 3
+            s = [None] * len(shape)
+            if bdims:
+                s[off] = bdims if len(bdims) > 1 else bdims[0]
+            if shape[off + 2] % m == 0:
+                s[off + 2] = "model"
+            return P(*s)
+        if name == "state":                    # rwkv (stack?, B, H, HD, HD)
+            off = len(shape) - 4
+            s = [None] * len(shape)
+            if bdims:
+                s[off] = bdims if len(bdims) > 1 else bdims[0]
+            if shape[off + 1] % m == 0:
+                s[off + 1] = "model"
+            return P(*s)
+        if name in ("x_prev", "ffn_x_prev"):   # (stack?, B, D)
+            off = len(shape) - 2
+            s = [None] * len(shape)
+            if bdims:
+                s[off] = bdims if len(bdims) > 1 else bdims[0]
+            if shape[off + 1] % m == 0:
+                s[off + 1] = "model"
+            return P(*s)
+        if name == "enc_out":                  # (B, ENC, D)
+            s = [None, None, None]
+            if bdims:
+                s[0] = bdims if len(bdims) > 1 else bdims[0]
+            return P(*s)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)

@@ -1,0 +1,160 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+ZERO device allocation) for every (arch x input-shape x mesh) combination —
+params, optimizer state, batch, KV caches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.launch import sharding as sh
+from repro.models.transformer import LM
+
+PyTree = Any
+
+
+def _axis(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _with_shardings(shapes: PyTree, plan_specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes, plan_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def fed_layout(cfg: ModelConfig, mesh: Mesh) -> Tuple[int, Tuple[str, ...]]:
+    """(G cohorts, fed mesh axes) for the train step — DESIGN.md §6."""
+    from repro.models.registry import count_params
+    huge = count_params(cfg) > sh.FSDP_THRESHOLD
+    p_ax, d_ax = _axis(mesh, "pod"), _axis(mesh, "data")
+    if huge:
+        return (p_ax, ("pod",)) if p_ax > 1 else (1, ())
+    if p_ax > 1:
+        return p_ax * d_ax, ("pod", "data")
+    return d_ax, ("data",)
+
+
+def _stack_shapes(shapes: PyTree, g: int) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((g,) + tuple(s.shape), s.dtype),
+        shapes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, lm: Optional[LM] = None,
+                fed_axes: Optional[Tuple[str, ...]] = None,
+                g: int = 0, param_dtype=jnp.float32,
+                head_aware: bool = True) -> PyTree:
+    lm = lm or LM(cfg)
+    shapes = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, param_dtype), shapes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    if fed_axes is not None and g > 0:
+        shapes = _stack_shapes(shapes, g)
+    plan = sh.plan_params(cfg, mesh, shapes,
+                          fed_axes=fed_axes if g > 0 else None,
+                          head_aware=head_aware)
+    return _with_shardings(shapes, plan.params, mesh), plan
+
+
+def _extras_specs(cfg: ModelConfig, lead: tuple, mesh: Mesh, lead_spec: tuple,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Frontend stub inputs (the one sanctioned stub — DESIGN.md §5)."""
+    ex = {}
+    if cfg.frontend == "vision_stub":
+        shape = lead + (cfg.num_prefix_tokens, cfg.d_model)
+        ex["prefix_embeds"] = _sds(shape, dtype, mesh,
+                                   P(*lead_spec, None, None))
+    if cfg.frontend == "audio_stub":
+        shape = lead + (cfg.encoder_seq_len, cfg.d_model)
+        ex["enc_frames"] = _sds(shape, dtype, mesh,
+                                P(*lead_spec, None, None))
+    return ex
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                tcfg: Optional[TrainConfig] = None,
+                force_swa: bool = False, lm: Optional[LM] = None,
+                cache_seq_shard: bool = False) -> Dict[str, Any]:
+    """Everything .lower() needs for (arch, shape, mesh): a dict of kwargs for
+    the corresponding step function, all ShapeDtypeStructs with shardings.
+    ``lm`` MUST be the step's own LM when the stage decomposition differs from
+    the default (the train step splits stages at the paper's layer j)."""
+    tcfg = tcfg or TrainConfig()
+    p_ax, d_ax = _axis(mesh, "pod"), _axis(mesh, "data")
+
+    if shape.kind == "train":
+        g, fed_axes = fed_layout(cfg, mesh)
+        lm = lm or LM(cfg, remat=tcfg.remat)
+        # head-aware attention replication is only right for training when
+        # activations are seq-sharded (else attention replicates compute)
+        params, plan = param_specs(cfg, mesh, lm, fed_axes=fed_axes, g=g,
+                                   head_aware=tcfg.seq_shard_activations)
+        cohort_batch = max(shape.global_batch // max(g, 1), 1)
+        mb = min(tcfg.microbatch, cohort_batch)
+        n_micro = max(cohort_batch // mb, 1)
+        lead = (g, tcfg.local_steps, n_micro, mb)
+        # batch dims: cohort axis over fed axes; within-cohort rows over any
+        # batch axis NOT used by the cohorts (FSDP case: rows over data)
+        row_axes = tuple(a for a in ("data",)
+                         if a not in fed_axes and _axis(mesh, a) > 1
+                         and mb % _axis(mesh, a) == 0)
+        fed_spec = (fed_axes if len(fed_axes) > 1 else
+                    (fed_axes[0] if fed_axes else None),)
+        lead_spec = fed_spec + (None, None,
+                                row_axes if len(row_axes) > 1 else
+                                (row_axes[0] if row_axes else None))
+        tokens = _sds(lead + (shape.seq_len,), jnp.int32, mesh,
+                      P(*lead_spec, None))
+        batch = {"tokens": tokens}
+        batch.update(_extras_specs(cfg, lead, mesh, lead_spec))
+        opt_state = ()                       # plain SGD
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                                   sharding=NamedSharding(mesh, P(None)))
+        return dict(mode="train", params=params, opt_state=opt_state,
+                    batch=batch, key=key, plan=plan, g=g, fed_axes=fed_axes)
+
+    # ---------------- inference ----------------
+    lm = lm or LM(cfg, force_swa=force_swa)
+    # head-aware attention replication is right for DECODE (attention work is
+    # tiny, fractional-head resharding dominates) but wrong for PREFILL
+    # (replicated quadratic attention = model-axis-times the work/device) —
+    # measured in EXPERIMENTS.md §Perf (gemma prefill 4.97s -> 34.4s when
+    # misapplied).
+    params, plan = param_specs(cfg, mesh, lm, param_dtype=jnp.bfloat16,
+                               head_aware=(shape.kind == "decode"))
+    b = shape.global_batch
+    if p_ax > 1 and b % (p_ax * d_ax) == 0:
+        bspec: Any = ("pod", "data")
+    elif b % d_ax == 0 and d_ax > 1:
+        bspec = "data"
+    else:
+        bspec = None
+
+    if shape.kind == "prefill":
+        tokens = _sds((b, shape.seq_len), jnp.int32, mesh, P(bspec, None))
+        batch = {"tokens": tokens}
+        batch.update(_extras_specs(cfg, (b,), mesh, (bspec,)))
+        return dict(mode="prefill", params=params, batch=batch, plan=plan)
+
+    # decode: ONE new token against a seq_len cache
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_cache(b, shape.seq_len, dtype=jnp.bfloat16))
+    cplan = sh.cache_plan(cfg, mesh, cache_shapes, b,
+                          seq_shard=cache_seq_shard)
+    cache = _with_shardings(cache_shapes, cplan, mesh)
+    tokens = _sds((b, 1), jnp.int32, mesh, P(bspec, None))
+    return dict(mode="decode", params=params, cache=cache, tokens=tokens,
+                plan=plan)

@@ -1,0 +1,256 @@
+"""Lowered step functions for the pod runtime.
+
+train_step  — ONE federated round as ONE pjit step (the paper's Algorithm 1
+              mapped onto the mesh, DESIGN.md §4):
+                * params carry a leading cohort axis G sharded over the
+                  federated mesh axes (data and/or pod);
+                * each cohort runs L local SGD steps with NO cross-cohort
+                  collective (client drift is real, as in FedAvg);
+                * FedAvg = mean over G (one weight all-reduce per round — the
+                  L-fold collective reduction vs. per-step DP);
+                * split-FL path: activation maps at split layer j, PCA +
+                  K-means selection per cohort, all-gather of the <1%
+                  representative maps, server-side upper training from
+                  W_G^u(0), compose (the paper's entire §3 in the graph).
+prefill_step — causal forward, last-position logits, KV cache unfilled
+               (prefill FLOPs/bytes dominate; cache write adds HBM traffic).
+decode_step  — one token against the (ring-buffer) cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.core import selection as sel
+from repro.models import layers as L
+from repro.models.transformer import LM, decompose, layer_specs, stage_layers
+from repro.optim import sgd
+
+PyTree = Any
+
+
+def _dtype(tcfg: TrainConfig):
+    return jnp.bfloat16 if tcfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------
+# train: one federated round per step
+# --------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, lm: Optional[LM] = None):
+    lm = lm or LM(cfg)
+    opt = sgd(tcfg.lr, momentum=tcfg.momentum,
+              weight_decay=tcfg.weight_decay)
+    dt = _dtype(tcfg)
+
+    # split boundary (stage-aligned) for the split-FL metadata path
+    j = cfg.split_layer
+    stages_with_split = decompose(layer_specs(cfg), boundary=j)
+    act_spec = None
+    if tcfg.seq_shard_activations:
+        from jax.sharding import PartitionSpec as P
+        act_spec = P(None, "model", None)
+    lm_split = LM(cfg, remat=tcfg.remat, act_spec=act_spec)
+    lm_split.stages = stages_with_split
+    boundary_stage, acc = 0, 0
+    for si, st in enumerate(stages_with_split):
+        if acc >= j:
+            boundary_stage = si
+            break
+        acc += stage_layers(st)
+
+    def local_loss(p, batch):
+        return lm_split.loss(p, batch, dtype=dt)
+
+    def one_cohort(params, opt_state, tokens, extras):
+        """L local steps (each over microbatches w/ grad accumulation)."""
+        def local_step(carry, step_batch):
+            p, s = carry
+            tok_mb, ex_mb = step_batch     # (n_micro, mb, T)
+
+            def micro(g_acc, mb):
+                t, e = mb
+                batch = dict(tokens=t, **e)
+                loss, g = jax.value_and_grad(local_loss)(p, batch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return g_acc, loss
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                              p)
+            g_sum, losses = jax.lax.scan(micro, g0, (tok_mb, ex_mb))
+            n_micro = tok_mb.shape[0]
+            g_mean = jax.tree.map(lambda g: g / n_micro, g_sum)
+            p, s = opt.apply(g_mean, s, p)
+            return (p, s), losses.mean()
+
+        (params, opt_state), losses = jax.lax.scan(
+            local_step, (params, opt_state), (tokens, extras))
+        return params, opt_state, losses.mean()
+
+    def train_step(client_params, opt_state, batch, key):
+        """client_params: G-stacked full-model pytree.
+        batch: {"tokens": (G, L, n_micro, mb, T), optional extras}."""
+        tokens = batch["tokens"]
+        g_ax = tokens.shape[0]
+        extras = {k: batch[k] for k in ("prefix_embeds", "enc_frames")
+                  if k in batch}
+
+        # extras leaves are (G, L, n_micro, mb, ...); {} vmaps trivially
+        new_p, new_s, loss = jax.vmap(one_cohort)(
+            client_params, opt_state, tokens, extras)
+
+        # ---- FedAvg (Eq. 2): ONE collective for the whole round ----
+        if tcfg.fedavg_compress == "bf16":
+            # communicate cohort DELTAS in bf16 (cohorts start each round
+            # from identical weights, so deltas are small): halves the
+            # round's weight all-reduce bytes; mean is accumulated in f32
+            base = jax.tree.map(lambda x: x[0], client_params)
+            avg = jax.tree.map(
+                lambda b, n: b + (jnp.sum((n - b[None]).astype(jnp.bfloat16),
+                                          0) / n.shape[0]).astype(b.dtype),
+                base, new_p)
+        else:
+            avg = jax.tree.map(lambda x: jnp.mean(x, 0), new_p)
+
+        metrics = {"loss": loss.mean()}
+
+        if tcfg.split_fl:
+            # ---- the paper's §3.1-3.3 on-mesh ----
+            probe = tokens[:, 0, 0]                       # (G, mb, T)
+            probe_ex = {k: v[:, 0, 0] for k, v in extras.items()}
+
+            def lower_acts(p_full, toks, ex):
+                h, _, _ = lm_split.apply(
+                    p_full, toks, mode="full",
+                    stage_range=(0, boundary_stage), dtype=dt, **ex)
+                return h                                   # (mb, T(+P), d)
+
+            acts = jax.vmap(lower_acts)(new_p, probe, probe_ex)  # (G,mb,T,d)
+            pooled = acts.mean(2)                          # (G, mb, d)
+
+            def select_one(feats, k_):
+                s_ = sel.select_metadata(
+                    feats, None, k_, per_class=False,
+                    clusters_per_class=tcfg.meta_clusters,
+                    pca_components=min(tcfg.pca_components,
+                                       feats.shape[0] - 1),
+                    kmeans_iters=8)
+                return s_.indices, s_.valid
+
+            keys = jax.random.split(key, g_ax)
+            idx, valid = jax.vmap(select_one)(pooled, keys)   # (G, K)
+            take0 = lambda a, i: jnp.take(a, i, 0)
+            sel_acts = jax.vmap(take0)(acts, idx)
+            sel_tok = jax.vmap(take0)(probe, idx)
+            sel_ex = {k: jax.vmap(take0)(v, idx) for k, v in probe_ex.items()}
+            # server aggregation == all-gather of the selected maps
+            k_sel = sel_acts.shape[1]
+            meta_acts = sel_acts.reshape(g_ax * k_sel, *sel_acts.shape[2:])
+            meta_tok = sel_tok.reshape(g_ax * k_sel, -1)
+            meta_ex = {k: v.reshape((g_ax * k_sel,) + v.shape[2:])
+                       for k, v in sel_ex.items()}
+            meta_w = valid.reshape(-1).astype(jnp.float32)
+
+            # meta-train upper part from W_G^u(0) == init-scaled avg here:
+            # faithful variant keeps a dedicated upper0 — passed via params0
+            upper_stages = [avg["stages"][i]
+                            for i in range(boundary_stage,
+                                           len(stages_with_split))]
+            upper = {"stages": upper_stages,
+                     "final_norm": avg["final_norm"]}
+            if "lm_head" in avg:
+                upper["lm_head"] = avg["lm_head"]
+
+            n_prefix = (cfg.num_prefix_tokens
+                        if "prefix_embeds" in extras else 0)
+
+            def upper_loss(up, a_mb, t_mb, w_mb, ex_mb):
+                p_view = {"stages": [None] * boundary_stage
+                          + list(up["stages"]),
+                          "final_norm": up["final_norm"],
+                          "embed": avg["embed"]}
+                if "lm_head" in up:
+                    p_view["lm_head"] = up["lm_head"]
+                if cfg.is_encoder_decoder:   # cross-attn in the upper half
+                    p_view["enc_stages"] = avg["enc_stages"]
+                    p_view["enc_norm"] = avg["enc_norm"]
+                h, _, aux = lm_split.apply(
+                    p_view, None, mode="full", hidden_in=a_mb,
+                    stage_range=(boundary_stage, len(stages_with_split)),
+                    return_hidden=True, dtype=dt,
+                    enc_frames=ex_mb.get("enc_frames"))
+                h = h[:, n_prefix:]
+                hn = L.rms_norm(h, up["final_norm"].astype(h.dtype),
+                                cfg.norm_eps)
+                if "lm_head" in up:
+                    logits = hn @ up["lm_head"].astype(h.dtype)
+                else:
+                    logits = hn @ avg["embed"].T.astype(h.dtype)
+                lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+                nll = -jnp.take_along_axis(lp, t_mb[:, 1:][..., None],
+                                           -1)[..., 0]
+                per = nll.mean(-1) + aux
+                return (per * w_mb).sum() / jnp.maximum(w_mb.sum(), 1.0)
+
+            def meta_step(up, _):
+                loss_m, gm = jax.value_and_grad(upper_loss)(
+                    up, meta_acts, meta_tok, meta_w, meta_ex)
+                up = jax.tree.map(lambda p_, g_: p_ - tcfg.lr * g_, up, gm)
+                return up, loss_m
+
+            upper, meta_losses = jax.lax.scan(
+                meta_step, upper, None, length=tcfg.meta_steps)
+            metrics["meta_loss"] = meta_losses.mean()
+            metrics["selected"] = meta_w.sum()
+            # composed model = [avg lower ; meta-trained upper]
+            avg = dict(avg, **{"final_norm": upper["final_norm"]})
+            avg["stages"] = (list(avg["stages"][:boundary_stage])
+                             + list(upper["stages"]))
+            if "lm_head" in upper:
+                avg["lm_head"] = upper["lm_head"]
+
+        # redistribute: next round every cohort starts from W_G(t)
+        new_client_params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (g_ax,) + x.shape), avg)
+        return new_client_params, new_s, metrics
+
+    return train_step, lm_split
+
+
+# --------------------------------------------------------------------------
+# inference steps
+# --------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, force_swa: bool = False,
+                      dtype=jnp.bfloat16):
+    lm = LM(cfg, force_swa=force_swa)
+
+    def prefill_step(params, batch):
+        extras = {k: batch[k] for k in ("prefix_embeds", "enc_frames")
+                  if k in batch}
+        h_all, _, _ = lm.apply(params, batch["tokens"], mode="full",
+                               return_hidden=True, dtype=dtype, **extras)
+        # last-position logits only (vocab projection on one position)
+        h = L.rms_norm(h_all[:, -1:], params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            out = h @ params["embed"].T.astype(h.dtype)
+        else:
+            out = h @ params["lm_head"].astype(h.dtype)
+        return out
+
+    return prefill_step, lm
+
+
+def make_decode_step(cfg: ModelConfig, force_swa: bool = False,
+                     dtype=jnp.bfloat16):
+    lm = LM(cfg, force_swa=force_swa)
+
+    def decode_step(params, cache, tokens):
+        logits, new_cache, _ = lm.apply(params, tokens, mode="decode",
+                                        cache=cache, dtype=dtype)
+        next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        return next_tok, new_cache
+
+    return decode_step, lm

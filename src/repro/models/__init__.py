@@ -1,0 +1,5 @@
+from repro.models.registry import make_lm, make_split_model, count_params
+from repro.models.wrn import make_split_wrn, init_wrn, wrn_apply
+
+__all__ = ["make_lm", "make_split_model", "count_params", "make_split_wrn",
+           "init_wrn", "wrn_apply"]

@@ -1,0 +1,802 @@
+"""Layer zoo for the assigned architectures.
+
+Conventions:
+  * params are plain dicts of jnp arrays; layer weights get stacked along a
+    leading repeat axis by the transformer assembler (lax.scan).
+  * every mixer has the signature
+        apply(params, x, *, cfg, mode, cache, pos, window) -> (y, new_cache)
+    mode in {"full", "decode"}; "full" covers train & prefill (causal);
+    "decode" consumes ONE new token against the cache.
+  * attention caches are ring buffers of size ``min(window or S, S)`` so
+    sliding-window layers hold O(window) state at 500k context (keys stored
+    post-RoPE, so ring order is irrelevant to the softmax).
+  * chunked (online-softmax) attention is the pure-jnp reference of the
+    Pallas flash kernel and keeps prefill memory sub-quadratic.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def keygen(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+# --------------------------------------------------------------------------
+# norms & activations
+# --------------------------------------------------------------------------
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, D/2)
+    if ang.ndim == 2:
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.stack([y1, y2], -1).reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# scaled-dot-product cores (reference paths; Pallas kernels mirror these)
+# --------------------------------------------------------------------------
+NEG = -1e30
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def sdpa_full(q, k, v, *, causal: bool, window: int, q_offset: int = 0):
+    """Direct attention (small seq). q:(B,Sq,H,D) k,v:(B,Sk,KV,D)."""
+    h, kv = q.shape[2], k.shape[2]
+    k, v = _repeat_kv(k, h // kv), _repeat_kv(v, h // kv)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(q.shape[1])[:, None] + q_offset
+    ki = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(s, bool)
+    if causal:
+        mask &= (qi >= ki)[None, None]
+    if window > 0:
+        mask &= (qi - ki < window)[None, None]
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, -1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def sdpa_chunked(q, k, v, *, causal: bool, window: int, chunk: int = 1024):
+    """Flash attention with a CUSTOM VJP: the backward pass recomputes the
+    score chunks instead of letting autodiff store per-chunk f32 residuals
+    through the scan (which costs O(S^2) f32 HBM traffic — EXPERIMENTS.md
+    §Perf H1 iteration 4). Mirrors what kernels/flash_attention.py does in
+    VMEM on TPU. ~2x less attention HBM traffic in training."""
+    return _sdpa_flash(q, k, v, causal, window, chunk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _sdpa_flash(q, k, v, causal, window, chunk):
+    out, _, _ = _flash_fwd_inner(q, k, v, causal, window, chunk)
+    return out
+
+
+def _flash_fwd_inner(q, k, v, causal, window, chunk):
+    out, m, l = _sdpa_chunked_raw(q, k, v, causal=causal, window=window,
+                                  chunk=chunk, return_stats=True)
+    return out, m, l
+
+
+def _sdpa_flash_fwd(q, k, v, causal, window, chunk):
+    out, m, l = _flash_fwd_inner(q, k, v, causal, window, chunk)
+    return out, (q, k, v, out, m, l)
+
+
+def _sdpa_flash_bwd(causal, window, chunk, res, dout):
+    q, k, v, out, m, l = res
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    n_rep = h // kv
+    scale = 1.0 / math.sqrt(d)
+    nchunks = (sk + chunk - 1) // chunk
+    pad = nchunks * chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+    kc = kp.reshape(b, nchunks, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nchunks, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    qi = jnp.arange(sq)[:, None]
+    # D_i = rowsum(dout * out) (the softmax-jacobian diagonal term)
+    D = jnp.einsum("bqhd,bqhd->bhq", dout.astype(jnp.float32),
+                   out.astype(jnp.float32))
+    li = jnp.maximum(l, 1e-30)
+
+    def body(dq_acc, xs):
+        ci, kcur, vcur = xs
+        kr = _repeat_kv(kcur, n_rep)
+        vr = _repeat_kv(vcur, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) * scale
+        ki = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = ki < sk
+        if causal:
+            mask &= qi >= ki
+        if window > 0:
+            mask &= (qi - ki) < window
+        s = jnp.where(mask[None, None], s, NEG)
+        p = jnp.exp(s - m[..., None]) / li[..., None]          # true probs
+        dp = jnp.einsum("bqhd,bkhd->bhqk", dout, vr).astype(jnp.float32)
+        ds = p * (dp - D[..., None]) * scale
+        ds16 = ds.astype(q.dtype)
+        p16 = p.astype(q.dtype)
+        dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds16, kr
+                                     ).astype(jnp.float32)
+        dk_f = jnp.einsum("bhqk,bqhd->bkhd", ds16, q)          # (b,chunk,h,d)
+        dv_f = jnp.einsum("bhqk,bqhd->bkhd", p16, dout)
+        # fold GQA reps back onto kv heads
+        dk_c = dk_f.reshape(b, chunk, kv, n_rep, d).sum(3)
+        dv_c = dv_f.reshape(b, chunk, kv, n_rep, d).sum(3)
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, sq, h, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (jnp.arange(nchunks), kc, vc))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * chunk, kv, d)[:, :sk]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * chunk, kv, d)[:, :sk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_sdpa_flash.defvjp(_sdpa_flash_fwd, _sdpa_flash_bwd)
+
+
+def _sdpa_chunked_raw(q, k, v, *, causal: bool, window: int,
+                      chunk: int = 1024, return_stats: bool = False):
+    """Online-softmax attention, scanning KV chunks: O(S*chunk) live memory.
+    This is the jnp oracle of kernels/flash_attention.py."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    n_rep = h // kv
+    scale = 1.0 / math.sqrt(d)
+    nchunks = (sk + chunk - 1) // chunk
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    qi = jnp.arange(sq)[:, None]
+
+    def body(carry, xs):
+        acc, m, l = carry                     # (B,Sq,H,D), (B,H,Sq), (B,H,Sq)
+        ki_chunk, kcur, vcur = xs
+        kcur = _repeat_kv(kcur, n_rep)
+        vcur = _repeat_kv(vcur, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kcur).astype(jnp.float32) * scale
+        ki = ki_chunk * chunk + jnp.arange(chunk)[None, :]
+        mask = ki < sk
+        if causal:
+            mask &= qi >= ki
+        if window > 0:
+            mask &= (qi - ki) < window
+        s = jnp.where(mask[None, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        # probabilities stored/multiplied in the input dtype (flash-kernel
+        # convention): for bf16 models p in [0,1] is safe in bf16 and halves
+        # the dominant (B,H,Sq,chunk) HBM traffic of the reference path
+        p16 = p.astype(q.dtype)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p16, vcur).astype(jnp.float32)
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, sq, h, d), jnp.float32)
+    m0 = jnp.full((b, h, sq), NEG, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.arange(nchunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    if return_stats:
+        return out.astype(q.dtype), m, l       # m,l: (B,H,Sq) f32
+    return out.astype(q.dtype)
+
+
+def sdpa_decode(q, k_cache, v_cache, valid, *, use_pallas: bool = False):
+    """Single-token attention over a (ring-buffer) cache.
+    q:(B,1,H,D) k,v:(B,S,KV,D) valid:(B,S) bool slot-filled mask.
+    jnp oracle of kernels/decode_attention.py."""
+    if use_pallas:
+        from repro.kernels.ops import flash_decode
+        return flash_decode(q, k_cache, v_cache, valid)
+    h, kv = q.shape[2], k_cache.shape[2]
+    k = _repeat_kv(k_cache, h // kv)
+    v = _repeat_kv(v_cache, h // kv)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, -1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+# --------------------------------------------------------------------------
+# GQA attention block
+# --------------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig, cross: bool = False) -> PyTree:
+    ks = keygen(key)
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "norm": jnp.ones((d,)),
+        "wq": dense_init(next(ks), (d, h * hd)),
+        "wk": dense_init(next(ks), (d, kv * hd)),
+        "wv": dense_init(next(ks), (d, kv * hd)),
+        "wo": dense_init(next(ks), (h * hd, d), scale=1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,))
+        p["bk"] = jnp.zeros((kv * hd,))
+        p["bv"] = jnp.zeros((kv * hd,))
+    if cross:
+        p["cross_norm"] = jnp.ones((d,))
+        p["cwq"] = dense_init(next(ks), (d, h * hd))
+        p["cwk"] = dense_init(next(ks), (d, kv * hd))
+        p["cwv"] = dense_init(next(ks), (d, kv * hd))
+        p["cwo"] = dense_init(next(ks), (h * hd, d), scale=1.0 / math.sqrt(h * hd))
+    return p
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, seq_len: int, window: int,
+                    dtype=jnp.bfloat16) -> PyTree:
+    size = min(window, seq_len) if window > 0 else seq_len
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {"k": jnp.zeros((batch, size, kv, hd), dtype),
+            "v": jnp.zeros((batch, size, kv, hd), dtype)}
+
+
+def attn_apply(p, x, *, cfg: ModelConfig, mode: str, cache=None, pos=None,
+               window: int = 0, causal: bool = True, chunked: bool = True,
+               enc_out=None):
+    """GQA attention. In decode mode, (cache, pos) hold/advance the KV ring."""
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    b, s, _ = xn.shape
+    q = (xn @ p["wq"] + p.get("bq", 0)).reshape(b, s, h, hd)
+    k = (xn @ p["wk"] + p.get("bk", 0)).reshape(b, s, kv, hd)
+    v = (xn @ p["wv"] + p.get("bv", 0)).reshape(b, s, kv, hd)
+
+    if mode == "decode":
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        size = cache["k"].shape[1]
+        slot = (pos % size)
+        # mask-based ring write: elementwise, shards on ANY cache dim (a
+        # per-batch dynamic_update_slice lowers to scatter -> SPMD full
+        # rematerialization + GB-scale all-gathers; see EXPERIMENTS.md §Perf
+        # H2). The full-cache touch is free: the cache is re-emitted through
+        # the layer scan anyway.
+        oh = (jnp.arange(size)[None, :] == slot[:, None])    # (B, S)
+        k_cache = jnp.where(oh[:, :, None, None], k.astype(cache["k"].dtype),
+                            cache["k"])
+        v_cache = jnp.where(oh[:, :, None, None], v.astype(cache["v"].dtype),
+                            cache["v"])
+        valid = jnp.arange(size)[None, :] <= jnp.minimum(pos, size - 1)[:, None]
+        o = sdpa_decode(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+                        valid)
+        cache = {"k": k_cache, "v": v_cache}
+    else:
+        positions = jnp.arange(s)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if chunked and s > 2048:
+            o = sdpa_chunked(q, k, v, causal=causal, window=window)
+        else:
+            o = sdpa_full(q, k, v, causal=causal, window=window)
+
+    y = o.reshape(b, s, h * hd) @ p["wo"]
+
+    if enc_out is not None:                    # whisper decoder cross-attn
+        xn2 = rms_norm(x + y, p["cross_norm"], cfg.norm_eps)
+        cq = (xn2 @ p["cwq"]).reshape(b, s, h, hd)
+        ck = (enc_out @ p["cwk"]).reshape(b, enc_out.shape[1], kv, hd)
+        cv = (enc_out @ p["cwv"]).reshape(b, enc_out.shape[1], kv, hd)
+        co = sdpa_full(cq, ck, cv, causal=False, window=0)
+        y = y + co.reshape(b, s, h * hd) @ p["cwo"]
+    return y, cache
+
+
+# --------------------------------------------------------------------------
+# MLA attention (deepseek-v2)
+# --------------------------------------------------------------------------
+def mla_init(key, cfg: ModelConfig) -> PyTree:
+    ks = keygen(key)
+    d, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    p = {"norm": jnp.ones((d,))}
+    if qr > 0:
+        p["w_dq"] = dense_init(next(ks), (d, qr))
+        p["q_norm"] = jnp.ones((qr,))
+        p["w_uq"] = dense_init(next(ks), (qr, h * (dn + dr)))
+    else:
+        p["w_q"] = dense_init(next(ks), (d, h * (dn + dr)))
+    p["w_dkv"] = dense_init(next(ks), (d, r))
+    p["kv_norm"] = jnp.ones((r,))
+    p["w_uk"] = dense_init(next(ks), (r, h * dn))
+    p["w_uv"] = dense_init(next(ks), (r, h * dv))
+    p["w_kr"] = dense_init(next(ks), (d, dr))
+    p["wo"] = dense_init(next(ks), (h * dv, d), scale=1.0 / math.sqrt(h * dv))
+    return p
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, seq_len: int,
+                   dtype=jnp.bfloat16) -> PyTree:
+    return {"c_kv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, seq_len, cfg.qk_rope_head_dim), dtype)}
+
+
+def _mla_qkv(p, xn, cfg):
+    b, s, _ = xn.shape
+    h = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if "w_dq" in p:
+        q = rms_norm(xn @ p["w_dq"], p["q_norm"], cfg.norm_eps) @ p["w_uq"]
+    else:
+        q = xn @ p["w_q"]
+    q = q.reshape(b, s, h, dn + dr)
+    c_kv = rms_norm(xn @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)  # (b,s,r)
+    k_rope = xn @ p["w_kr"]                                        # (b,s,dr)
+    return q, c_kv, k_rope
+
+
+def mla_apply(p, x, *, cfg: ModelConfig, mode: str, cache=None, pos=None,
+              window: int = 0, absorbed: bool = False, chunked: bool = True,
+              **_):
+    """MLA. ``absorbed=False`` is the naive baseline that reconstructs per-head
+    K/V from the latent cache (the §Perf hillclimb switches decode to the
+    absorbed form, which attends in the kv_lora latent space)."""
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    b, s, _ = xn.shape
+    q, c_kv, k_rope = _mla_qkv(p, xn, cfg)
+
+    if mode == "decode":
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], pos[:, None],
+                            cfg.rope_theta)[:, :, 0]
+        size = cache["c_kv"].shape[1]
+        slot = pos % size
+        # mask-based ring write (see attn_apply) — scatter-free, shardable
+        oh = (jnp.arange(size)[None, :] == slot[:, None])[..., None]
+        ckv_c = jnp.where(oh, c_kv.astype(cache["c_kv"].dtype),
+                          cache["c_kv"])
+        kr_c = jnp.where(oh, k_rope.astype(cache["k_rope"].dtype),
+                         cache["k_rope"])
+        valid = jnp.arange(size)[None, :] <= jnp.minimum(pos, size - 1)[:, None]
+        scale = 1.0 / math.sqrt(dn + dr)
+        if absorbed:
+            # fold W_uk into q: attend directly in the r-dim latent space
+            w_uk = p["w_uk"].reshape(-1, h, dn)                 # (r,h,dn)
+            q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)  # (b,1,h,r)
+            s_lat = jnp.einsum("bqhr,bkr->bhqk", q_lat,
+                               ckv_c.astype(q.dtype))
+            s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope,
+                                kr_c.astype(q.dtype))
+            att = (s_lat + s_rope).astype(jnp.float32) * scale
+            att = jnp.where(valid[:, None, None, :], att, NEG)
+            pr = jax.nn.softmax(att, -1).astype(q.dtype)
+            o_lat = jnp.einsum("bhqk,bkr->bqhr", pr, ckv_c.astype(q.dtype))
+            w_uv = p["w_uv"].reshape(-1, h, dv)                 # (r,h,dv)
+            o = jnp.einsum("bqhr,rhv->bqhv", o_lat, w_uv)
+        else:
+            # naive: reconstruct per-head K/V for every cached position
+            k_nope = (ckv_c.astype(q.dtype) @ p["w_uk"]).reshape(b, size, h, dn)
+            vfull = (ckv_c.astype(q.dtype) @ p["w_uv"]).reshape(b, size, h, dv)
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr_c[:, :, None, :].astype(q.dtype),
+                                          (b, size, h, dr))], -1)
+            q_full = jnp.concatenate([q_nope, q_rope], -1)
+            att = jnp.einsum("bqhd,bkhd->bhqk", q_full, k_full
+                             ).astype(jnp.float32) * scale
+            att = jnp.where(valid[:, None, None, :], att, NEG)
+            pr = jax.nn.softmax(att, -1).astype(q.dtype)
+            o = jnp.einsum("bhqk,bkhd->bqhd", pr, vfull)
+        cache = {"c_kv": ckv_c, "k_rope": kr_c}
+    else:
+        positions = jnp.arange(s)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+        k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, dn)
+        vfull = (c_kv @ p["w_uv"]).reshape(b, s, h, dv)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        # pad v to qk head dim so the shared SDPA cores apply, then slice back
+        if chunked and s > 2048:
+            vpad = jnp.pad(vfull, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+            o = sdpa_chunked(q_full, k_full, vpad, causal=True,
+                             window=window)[..., :dv]
+        else:
+            vpad = jnp.pad(vfull, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+            o = sdpa_full(q_full, k_full, vpad, causal=True,
+                          window=window)[..., :dv]
+    y = o.reshape(b, s, h * dv) @ p["wo"]
+    return y, cache
+
+
+# --------------------------------------------------------------------------
+# FFN (dense) and MoE
+# --------------------------------------------------------------------------
+def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> PyTree:
+    ks = keygen(key)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {"norm": jnp.ones((d,)),
+            "w_gate": dense_init(next(ks), (d, f)),
+            "w_up": dense_init(next(ks), (d, f)),
+            "w_down": dense_init(next(ks), (f, d), scale=1.0 / math.sqrt(f))}
+
+
+def ffn_apply(p, x, *, cfg: ModelConfig):
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    return (act_fn(cfg.act)(xn @ p["w_gate"]) * (xn @ p["w_up"])) @ p["w_down"]
+
+
+def moe_init(key, cfg: ModelConfig) -> PyTree:
+    ks = keygen(key)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {"norm": jnp.ones((d,)),
+         "router": dense_init(next(ks), (d, e), scale=0.02),
+         "we_gate": dense_init(next(ks), (e, d, f)),
+         "we_up": dense_init(next(ks), (e, d, f)),
+         "we_down": dense_init(next(ks), (e, f, d), scale=1.0 / math.sqrt(f))}
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["ws_gate"] = dense_init(next(ks), (d, fs))
+        p["ws_up"] = dense_init(next(ks), (d, fs))
+        p["ws_down"] = dense_init(next(ks), (fs, d), scale=1.0 / math.sqrt(fs))
+    return p
+
+
+def moe_apply(p, x, *, cfg: ModelConfig, capacity_factor: float = 1.25,
+              group_size: int = 512):
+    """GShard-style einsum dispatch MoE (top-k, capacity-dropped).
+
+    Tokens are grouped; each group dispatches to per-expert capacity slots via
+    one-hot einsums — fully SPMD-shardable (experts over the model axis give
+    expert parallelism; groups follow the batch over the data axis). The
+    dispatch einsums' FLOPs/bytes are real and show up in the roofline (that
+    overhead is a documented hillclimb axis; see EXPERIMENTS.md §Perf)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    flat = xn.reshape(-1, d)
+    n = flat.shape[0]
+    g = max(n // group_size, 1)
+    gs = n // g
+    flat = flat[: g * gs].reshape(g, gs, d)
+
+    logits = flat @ p["router"]                                   # (g,gs,e)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    topv, topi = jax.lax.top_k(probs, k)                          # (g,gs,k)
+    topv = (topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+            ).astype(x.dtype)
+
+    cap = max(int(gs * k / e * capacity_factor), 1)
+    # position of each (token, choice) within its expert's capacity
+    oh = jax.nn.one_hot(topi, e, dtype=jnp.int32)                 # (g,gs,k,e)
+    pos_in_e = jnp.cumsum(oh.reshape(g, gs * k, e), 1).reshape(g, gs, k, e) - 1
+    pos_in_e = (pos_in_e * oh).sum(-1)                            # (g,gs,k)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, pos_in_e, cap)                         # cap == dropped
+    onehot_e = jax.nn.one_hot(topi, e, dtype=x.dtype)             # (g,gs,k,e)
+    onehot_c = jax.nn.one_hot(slot, cap + 1, dtype=x.dtype)[..., :cap]
+    # dispatch/combine tensors (g, gs, e, cap)
+    disp = jnp.einsum("gske,gskc->gsec", onehot_e, onehot_c)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot_e, onehot_c, topv)
+
+    xe = jnp.einsum("gsec,gsd->egcd", disp, flat)                 # (e,g,cap,d)
+    he = act_fn(cfg.act)(jnp.einsum("egcd,edf->egcf", xe, p["we_gate"])) \
+        * jnp.einsum("egcd,edf->egcf", xe, p["we_up"])
+    ye = jnp.einsum("egcf,efd->egcd", he, p["we_down"])            # (e,g,cap,d)
+    y = jnp.einsum("gsec,egcd->gsd", combine, ye).reshape(-1, d)
+    if g * gs < n:
+        y = jnp.pad(y, ((0, n - g * gs), (0, 0)))
+    y = y.reshape(b, s, d)
+
+    if cfg.num_shared_experts:
+        y = y + (act_fn(cfg.act)(xn @ p["ws_gate"]) * (xn @ p["ws_up"])
+                 ) @ p["ws_down"]
+    # router z-loss / aux load-balance loss (returned via aux, summed outside)
+    me = probs.mean((0, 1))
+    ce = jax.nn.one_hot(topi[..., 0], e).mean((0, 1))
+    aux = cfg.router_aux_loss * e * jnp.sum(me * ce)
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# Mamba (jamba's SSM mixer)
+# --------------------------------------------------------------------------
+def mamba_init(key, cfg: ModelConfig) -> PyTree:
+    ks = keygen(key)
+    d, di, st, cw = cfg.d_model, cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_width
+    dt_rank = max(d // 16, 1)
+    return {
+        "norm": jnp.ones((d,)),
+        "w_in": dense_init(next(ks), (d, 2 * di)),
+        "conv_w": dense_init(next(ks), (cw, di), scale=1.0 / math.sqrt(cw)),
+        "conv_b": jnp.zeros((di,)),
+        "w_x": dense_init(next(ks), (di, dt_rank + 2 * st)),
+        "w_dt": dense_init(next(ks), (dt_rank, di)),
+        "dt_bias": jnp.full((di,), -4.6),            # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, st + 1, dtype=jnp.float32), (di, st)) * 1.0),
+        "D": jnp.ones((di,)),
+        "w_out": dense_init(next(ks), (di, d), scale=1.0 / math.sqrt(di)),
+    }
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> PyTree:
+    di, st, cw = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_width
+    return {"conv": jnp.zeros((batch, cw - 1, di), dtype),
+            "ssm": jnp.zeros((batch, di, st), dtype)}
+
+
+def _selective_scan(u, dt, A, B, C, D, chunk: int = 256):
+    """h_t = exp(dt A) h_{t-1} + dt B_t u_t ; y_t = C_t.h_t + D u_t.
+    Chunked: sequential lax.scan over chunks, associative scan within.
+    u:(b,s,di) dt:(b,s,di) A:(di,st) B,C:(b,s,st)."""
+    b, s, di = u.shape
+    st = A.shape[1]
+    nch = max(s // chunk, 1)
+    chunk = s // nch
+    dA = jnp.exp(dt[..., None] * A)                    # (b,s,di,st)
+    dBu = dt[..., None] * B[:, :, None, :] * u[..., None]
+
+    dA_c = dA.reshape(b, nch, chunk, di, st)
+    dBu_c = dBu.reshape(b, nch, chunk, di, st)
+    C_c = C.reshape(b, nch, chunk, st)
+
+    def outer(h, xs):
+        da, dbu, c = xs                               # (b,chunk,di,st)...
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        aa, hh = jax.lax.associative_scan(combine, (da, dbu), axis=1)
+        hh = hh + aa * h[:, None]                     # inject carry
+        y = jnp.einsum("bcds,bcs->bcd", hh, c)
+        return hh[:, -1], y
+
+    h0 = jnp.zeros((b, di, st), dA.dtype)
+    _, ys = jax.lax.scan(outer, h0,
+                         (dA_c.transpose(1, 0, 2, 3, 4),
+                          dBu_c.transpose(1, 0, 2, 3, 4),
+                          C_c.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, di)
+    return y + u * D
+
+
+def mamba_apply(p, x, *, cfg: ModelConfig, mode: str, cache=None, **_):
+    di, st, cw = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_width
+    dt_rank = max(cfg.d_model // 16, 1)
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    b, s, _ = xn.shape
+    xz = xn @ p["w_in"]
+    u, z = xz[..., :di], xz[..., di:]
+
+    if mode == "decode":
+        conv_state = jnp.concatenate([cache["conv"], u.astype(cache["conv"].dtype)], 1)
+        uc = jnp.einsum("bwd,wd->bd", conv_state.astype(u.dtype),
+                        p["conv_w"]) + p["conv_b"]
+        uc = jax.nn.silu(uc)[:, None]                  # (b,1,di)
+        dbc = uc @ p["w_x"]
+        dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["w_dt"] + p["dt_bias"])
+        B = dbc[..., dt_rank:dt_rank + st]
+        C = dbc[..., dt_rank + st:]
+        A = -jnp.exp(p["A_log"])
+        dA = jnp.exp(dt[:, 0, :, None] * A)            # (b,di,st)
+        h = cache["ssm"].astype(dA.dtype) * dA \
+            + dt[:, 0, :, None] * B[:, 0, None, :] * uc[:, 0, :, None]
+        y = jnp.einsum("bds,bs->bd", h, C[:, 0])[:, None] + uc * p["D"]
+        cache = {"conv": conv_state[:, 1:].astype(cache["conv"].dtype),
+                 "ssm": h.astype(cache["ssm"].dtype)}
+    else:
+        upad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+        uc = sum(upad[:, i:i + s] * p["conv_w"][i] for i in range(cw)) \
+            + p["conv_b"]
+        uc = jax.nn.silu(uc)
+        dbc = uc @ p["w_x"]
+        dt = jax.nn.softplus(dbc[..., :dt_rank] @ p["w_dt"] + p["dt_bias"])
+        B = dbc[..., dt_rank:dt_rank + st]
+        C = dbc[..., dt_rank + st:]
+        A = -jnp.exp(p["A_log"])
+        y = _selective_scan(uc, dt, A, B, C, p["D"])
+    y = y * jax.nn.silu(z)
+    return (y @ p["w_out"]), cache
+
+
+# --------------------------------------------------------------------------
+# RWKV6 (Finch) time-mix block — data-dependent decay linear attention
+# --------------------------------------------------------------------------
+def rwkv_init(key, cfg: ModelConfig) -> PyTree:
+    ks = keygen(key)
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    lora = max(d // 16, 32)
+    return {
+        "norm": jnp.ones((d,)),
+        "mu_r": jnp.full((d,), 0.5), "mu_k": jnp.full((d,), 0.5),
+        "mu_v": jnp.full((d,), 0.5), "mu_w": jnp.full((d,), 0.5),
+        "mu_g": jnp.full((d,), 0.5),
+        "wr": dense_init(next(ks), (d, h * hd)),
+        "wk": dense_init(next(ks), (d, h * hd)),
+        "wv": dense_init(next(ks), (d, h * hd)),
+        "wg": dense_init(next(ks), (d, h * hd)),
+        # data-dependent decay (the Finch contribution): w = f(x) via LoRA
+        "w_decay1": dense_init(next(ks), (d, lora)),
+        "w_decay2": dense_init(next(ks), (lora, h * hd)),
+        "decay_bias": jnp.full((h * hd,), -6.0),
+        "bonus": jnp.zeros((h, hd)),
+        "ln_x": jnp.ones((h * hd,)),
+        "wo": dense_init(next(ks), (h * hd, d), scale=1.0 / math.sqrt(h * hd)),
+    }
+
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> PyTree:
+    h, hd = cfg.num_heads, cfg.head_dim
+    return {"state": jnp.zeros((batch, h, hd, hd), dtype),
+            "x_prev": jnp.zeros((batch, cfg.d_model), dtype)}
+
+
+def _wkv_chunked(r, k, v, w, u, chunk: int = 64):
+    """Chunked linear attention with per-step diagonal decay (f32 internals).
+    r,k,v,w: (b,s,h,hd); w in (0,1) decay; u bonus (h,hd).
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ; o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+    chunk=64 keeps exp(-cum) within f32 range given log(w) >= -0.61 (the decay
+    parameterization in rwkv_apply bounds it); this is the jnp oracle a wkv
+    Pallas kernel would mirror."""
+    b, s, h, hd = r.shape
+    nch = max(s // chunk, 1)
+    chunk = s // nch
+
+    rc = r.reshape(b, nch, chunk, h, hd).transpose(1, 0, 3, 2, 4)  # (n,b,h,c,hd)
+    kc = k.reshape(b, nch, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nch, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    wc = w.reshape(b, nch, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+
+    def body(S, xs):
+        rr, kk, vv, ww = (t.astype(jnp.float32) for t in xs)  # (b,h,c,hd)
+        logw = jnp.log(jnp.maximum(ww, 1e-6))
+        cum = jnp.cumsum(logw, 2)               # sum of log-decays up to & incl t
+        # inter-chunk: r_i sees S0 through decay prod_{l<i} w_l = exp(cum_{i-1})
+        r_dec = rr * jnp.exp(cum - logw)
+        o = jnp.einsum("bhcd,bhde->bhce", r_dec, S)
+        # intra-chunk pair (i, j<i): coeff exp(cum_{i-1} - cum_j) per dim d
+        k_dec = kk * jnp.exp(-cum)
+        att = jnp.einsum("bhcd,bhed->bhce", r_dec, k_dec)      # (b,h,i,j)
+        tri = jnp.tril(jnp.ones((chunk, chunk), att.dtype), -1)
+        att = att * tri
+        # bonus term (diagonal): r_t . (u * k_t) v_t
+        diag = jnp.einsum("bhcd,bhcd->bhc", rr, kk * u[None, :, None, :])
+        o = o + jnp.einsum("bhce,bhed->bhcd", att, vv) + diag[..., None] * vv
+        # state update: S <- diag(prod w) S + sum_j (prod_{l>j} w_l) k_j v_j^T
+        wall = jnp.exp(cum[:, :, -1])
+        k_rem = kk * jnp.exp(cum[:, :, -1:] - cum)
+        S = S * wall[..., None] + jnp.einsum("bhcd,bhce->bhde", k_rem, vv)
+        return S, o
+
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, os = jax.lax.scan(body, S0, (rc, kc, vc, wc))
+    return os.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd).astype(r.dtype)
+
+
+def rwkv_apply(p, x, *, cfg: ModelConfig, mode: str, cache=None, **_):
+    h, hd = cfg.num_heads, cfg.head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    b, s, d = xn.shape
+
+    if mode == "decode":
+        x_prev = cache["x_prev"][:, None].astype(xn.dtype)
+    else:
+        x_prev = jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+    def mix(mu):
+        return xn + (x_prev - xn) * mu
+
+    r = (mix(p["mu_r"]) @ p["wr"]).reshape(b, s, h, hd)
+    k = (mix(p["mu_k"]) @ p["wk"]).reshape(b, s, h, hd)
+    v = (mix(p["mu_v"]) @ p["wv"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["wg"])
+    dec = jax.nn.sigmoid(
+        (jax.nn.tanh(mix(p["mu_w"]) @ p["w_decay1"]) @ p["w_decay2"])
+        + p["decay_bias"]).reshape(b, s, h, hd)
+    # data-dependent decay (Finch): w in (exp(-0.6065), 1); the bound keeps
+    # the chunked form's exp(-cumsum(log w)) inside f32 range (see _wkv_chunked)
+    w = jnp.exp(-0.6065 * dec)
+
+    if mode == "decode":
+        S = cache["state"].astype(jnp.float32)               # (b,h,hd,hd)
+        r1, k1, v1, w1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+        kv = jnp.einsum("bhd,bhe->bhde", k1, v1)
+        # o_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+        o = jnp.einsum("bhd,bhde->bhe", r1,
+                       S + p["bonus"][None, :, :, None] * kv)
+        S = S * w1[..., None] + kv
+        cache = {"state": S.astype(cache["state"].dtype),
+                 "x_prev": xn[:, -1].astype(cache["x_prev"].dtype)}
+        o = o[:, None].astype(r.dtype)
+    else:
+        o = _wkv_chunked(r, k, v, w, p["bonus"])
+
+    o = o.reshape(b, s, h * hd)
+    o = rms_norm(o, p["ln_x"], cfg.norm_eps) * g
+    return (o @ p["wo"]), cache
+
+
+# --------------------------------------------------------------------------
+# RWKV6 channel-mix (its FFN variant)
+# --------------------------------------------------------------------------
+def rwkv_ffn_init(key, cfg: ModelConfig) -> PyTree:
+    ks = keygen(key)
+    d, f = cfg.d_model, cfg.d_ff
+    return {"norm": jnp.ones((d,)),
+            "mu_k": jnp.full((d,), 0.5), "mu_r": jnp.full((d,), 0.5),
+            "wk": dense_init(next(ks), (d, f)),
+            "wv": dense_init(next(ks), (f, d), scale=1.0 / math.sqrt(f)),
+            "wr": dense_init(next(ks), (d, d))}
+
+
+def rwkv_ffn_apply(p, x, *, cfg: ModelConfig, x_prev=None):
+    """Returns (out, xn_last) — xn_last is the decode-mode token-shift state."""
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    if x_prev is None:
+        xp = jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xp = x_prev[:, None].astype(xn.dtype)
+    k = (xn + (xp - xn) * p["mu_k"]) @ p["wk"]
+    r = jax.nn.sigmoid((xn + (xp - xn) * p["mu_r"]) @ p["wr"])
+    return r * (jnp.square(jax.nn.relu(k)) @ p["wv"]), xn[:, -1]

@@ -1,0 +1,52 @@
+"""Model registry + analytic parameter counts (via jax.eval_shape — zero
+allocation, always exact w.r.t. the real init)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def make_lm(cfg: ModelConfig, force_swa: bool = False):
+    from repro.models.transformer import LM
+    return LM(cfg, force_swa=force_swa)
+
+
+def make_split_model(cfg_or_id, split_layer: Optional[int] = None):
+    from repro.configs import get_config
+    from repro.models.transformer import make_split_lm
+    cfg = get_config(cfg_or_id) if isinstance(cfg_or_id, str) else cfg_or_id
+    return make_split_lm(cfg, split_layer)
+
+
+_EXPERT_KEYS = ("we_gate", "we_up", "we_down")
+
+
+@functools.lru_cache(maxsize=64)
+def _param_shapes(cfg: ModelConfig):
+    lm = make_lm(cfg)
+    shapes = jax.eval_shape(lm.init, jax.random.PRNGKey(0))
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((keys, tuple(leaf.shape)))
+    return out
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False,
+                 include_embed: bool = True) -> int:
+    total = 0.0
+    frac = (cfg.num_experts_per_tok / cfg.num_experts) if cfg.is_moe else 1.0
+    for keys, shape in _param_shapes(cfg):
+        n = float(np.prod(shape)) if shape else 1.0
+        if not include_embed and ("embed" in keys or "lm_head" in keys):
+            continue
+        if active_only and any(k in keys for k in _EXPERT_KEYS):
+            n *= frac
+        total += n
+    return int(total)

@@ -1,0 +1,514 @@
+"""Config-driven LM assembly for all assigned architectures.
+
+A model is a list of STAGES. Each stage is either
+  * scan:   a repeating unit of block specs, params stacked over repeats
+            (lax.scan keeps HLO small for 34-72 layer models), or
+  * unroll: explicit layers (pattern prefixes/remainders, e.g. deepseek's
+            first dense layer, gemma3's 34 = 5x(5L+1G) + 4L tail).
+
+The paper's split at layer j slices the stage list (unit-aligned), giving the
+lower/upper param partition used by FedAvg / MetaTraining (core.split).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# block specs & stage decomposition
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BlockSpec:
+    mixer: str                  # attn | mla | mamba | rwkv | attn_cross
+    ffn: str                    # dense | moe | rwkv_ffn
+    window: int = 0             # static sliding window (0 = full)
+    causal: bool = True
+
+
+@dataclass(frozen=True)
+class Stage:
+    kind: str                   # scan | unroll
+    unit: Tuple[BlockSpec, ...]
+    repeats: int
+
+
+def layer_specs(cfg: ModelConfig, force_swa: bool = False,
+                decoder: bool = True) -> List[BlockSpec]:
+    """Per-layer block specs for the decoder stack (or encoder if decoder=False)."""
+    if not decoder:  # whisper encoder: bidirectional attention + dense FFN
+        return [BlockSpec("attn", "dense", 0, causal=False)] * cfg.encoder_layers
+    kinds = cfg.layer_kinds()
+    windows = cfg.window_sizes(0, force_swa)
+    specs, ai = [], 0
+    for i, kind in enumerate(kinds):
+        if kind == "rwkv":
+            mixer, w = "rwkv", 0
+        elif kind == "mamba":
+            mixer, w = "mamba", 0
+        else:
+            mixer = "mla" if cfg.attention_kind == "mla" else "attn"
+            if cfg.is_encoder_decoder:
+                mixer = "attn_cross"
+            w = windows[ai]
+            ai += 1
+        if kind == "rwkv":
+            ffn = "rwkv_ffn"
+        elif cfg.is_moe and i >= cfg.first_dense_layers \
+                and (i % cfg.moe_layer_period == cfg.moe_layer_period - 1
+                     or cfg.moe_layer_period == 1):
+            ffn = "moe"
+        else:
+            ffn = "dense"
+        specs.append(BlockSpec(mixer, ffn, w))
+    return specs
+
+
+def decompose(specs: List[BlockSpec], boundary: Optional[int] = None
+              ) -> List[Stage]:
+    """Group per-layer specs into scan/unroll stages. ``boundary`` forces a
+    stage break at layer index j (the paper's split point)."""
+    if boundary is not None and 0 < boundary < len(specs):
+        return decompose(specs[:boundary]) + decompose(specs[boundary:])
+    n = len(specs)
+    if n == 0:
+        return []
+    best = None  # (scanned_layers, prefix, period, repeats)
+    for prefix in range(0, min(3, n)):
+        for p in range(1, min(9, n - prefix + 1)):
+            reps = (n - prefix) // p
+            if reps < 2:
+                continue
+            body = specs[prefix:prefix + reps * p]
+            if all(body[i] == body[i % p] for i in range(len(body))):
+                score = reps * p
+                if best is None or score > best[0] or (
+                        score == best[0] and p < best[2]):
+                    best = (score, prefix, p, reps)
+    if best is None:
+        return [Stage("unroll", tuple(specs), 1)]
+    _, prefix, p, reps = best
+    stages = []
+    if prefix:
+        stages.append(Stage("unroll", tuple(specs[:prefix]), 1))
+    stages.append(Stage("scan", tuple(specs[prefix:prefix + p]), reps))
+    rest = specs[prefix + reps * p:]
+    if rest:
+        stages.append(Stage("unroll", tuple(rest), 1))
+    return stages
+
+
+def stage_layers(st: Stage) -> int:
+    return len(st.unit) * st.repeats
+
+
+# --------------------------------------------------------------------------
+# per-block init/apply/cache dispatch
+# --------------------------------------------------------------------------
+def _block_init(key, cfg: ModelConfig, spec: BlockSpec) -> PyTree:
+    k1, k2 = jax.random.split(key)
+    if spec.mixer in ("attn", "attn_cross"):
+        mixer = L.attn_init(k1, cfg, cross=(spec.mixer == "attn_cross"))
+    elif spec.mixer == "mla":
+        mixer = L.mla_init(k1, cfg)
+    elif spec.mixer == "mamba":
+        mixer = L.mamba_init(k1, cfg)
+    elif spec.mixer == "rwkv":
+        mixer = L.rwkv_init(k1, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "dense":
+        ffn = L.ffn_init(k2, cfg)
+    elif spec.ffn == "moe":
+        ffn = L.moe_init(k2, cfg)
+    elif spec.ffn == "rwkv_ffn":
+        ffn = L.rwkv_ffn_init(k2, cfg)
+    else:
+        raise ValueError(spec.ffn)
+    return {"mixer": mixer, "ffn": ffn}
+
+
+def _block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int, seq_len: int,
+                 dtype) -> PyTree:
+    c: dict = {}
+    if spec.mixer in ("attn", "attn_cross"):
+        c["mixer"] = L.attn_cache_init(cfg, batch, seq_len, spec.window, dtype)
+    elif spec.mixer == "mla":
+        c["mixer"] = L.mla_cache_init(cfg, batch, seq_len, dtype)
+    elif spec.mixer == "mamba":
+        c["mixer"] = L.mamba_cache_init(cfg, batch)
+    elif spec.mixer == "rwkv":
+        c["mixer"] = L.rwkv_cache_init(cfg, batch)
+        c["ffn_x_prev"] = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return c
+
+
+def _block_apply(params, x, spec: BlockSpec, cfg: ModelConfig, mode: str,
+                 cache, pos, enc_out):
+    kw = dict(cfg=cfg, mode=mode, cache=(cache or {}).get("mixer"), pos=pos,
+              window=spec.window)
+    if spec.mixer in ("attn", "attn_cross"):
+        y, mc = L.attn_apply(params["mixer"], x, causal=spec.causal,
+                             enc_out=enc_out if spec.mixer == "attn_cross"
+                             else None, **kw)
+    elif spec.mixer == "mla":
+        y, mc = L.mla_apply(params["mixer"], x, absorbed=cfg.mla_absorbed, **kw)
+    elif spec.mixer == "mamba":
+        y, mc = L.mamba_apply(params["mixer"], x, **kw)
+    else:
+        y, mc = L.rwkv_apply(params["mixer"], x, **kw)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {"mixer": mc} if mc is not None else {}
+    if spec.ffn == "dense":
+        x = x + L.ffn_apply(params["ffn"], x, cfg=cfg)
+    elif spec.ffn == "moe":
+        y, aux = L.moe_apply(params["ffn"], x, cfg=cfg)
+        x = x + y
+    else:  # rwkv_ffn
+        xp = (cache or {}).get("ffn_x_prev") if mode == "decode" else None
+        y, xn_last = L.rwkv_ffn_apply(params["ffn"], x, cfg=cfg, x_prev=xp)
+        x = x + y
+        if mode == "decode":
+            new_cache["ffn_x_prev"] = xn_last.astype(jnp.float32)
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+def sinusoidal_pos(d: int, positions) -> jnp.ndarray:
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+
+
+class LM:
+    """Bundles init/apply/cache/split for one ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig, force_swa: bool = False,
+                 remat: bool = False, remat_policy=None,
+                 act_spec=None):
+        self.cfg = cfg
+        self.force_swa = force_swa
+        self.remat = remat
+        self.remat_policy = remat_policy    # None = recompute everything
+        # optional PartitionSpec pinned onto the hidden states between blocks
+        # (sequence sharding for archs whose heads don't divide the model
+        # axis — EXPERIMENTS.md §Perf H1); applied in full mode only.
+        self.act_spec = act_spec
+        self.specs = layer_specs(cfg, force_swa)
+        self.stages = decompose(self.specs)
+        if cfg.is_encoder_decoder:
+            self.enc_specs = layer_specs(cfg, decoder=False)
+            self.enc_stages = decompose(self.enc_specs)
+
+    # ---------------- init ----------------
+    def _stage_init(self, key, stage: Stage) -> PyTree:
+        if stage.kind == "unroll":
+            keys = jax.random.split(key, len(stage.unit))
+            return [_block_init(k, self.cfg, s)
+                    for k, s in zip(keys, stage.unit)]
+        # scan: params stacked over repeats per unit position
+        keys = jax.random.split(key, stage.repeats * len(stage.unit)
+                                ).reshape(stage.repeats, len(stage.unit), 2)
+        out = []
+        for u, spec in enumerate(stage.unit):
+            stacked = jax.vmap(lambda k: _block_init(k, self.cfg, spec)
+                               )(keys[:, u])
+            out.append(stacked)
+        return out
+
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        ks = L.keygen(key)
+        v, d = cfg.padded_vocab, cfg.d_model
+        params: dict = {
+            "embed": (jax.random.normal(next(ks), (v, d)) / math.sqrt(d)
+                      ).astype(jnp.float32),
+            "final_norm": jnp.ones((d,)),
+            "stages": [self._stage_init(next(ks), st) for st in self.stages],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(next(ks), (d, v))
+        if cfg.is_encoder_decoder:
+            params["enc_stages"] = [self._stage_init(next(ks), st)
+                                    for st in self.enc_stages]
+            params["enc_norm"] = jnp.ones((d,))
+        if cfg.frontend == "vision_stub":
+            # projector from (stubbed) vision embeddings into d_model
+            params["proj"] = L.dense_init(next(ks), (d, d))
+        return params
+
+    # ---------------- cache ----------------
+    def init_cache(self, batch: int, seq_len: int,
+                   dtype=jnp.bfloat16) -> PyTree:
+        def stage_cache(st: Stage):
+            if st.kind == "unroll":
+                return [_block_cache(self.cfg, s, batch, seq_len, dtype)
+                        for s in st.unit]
+            out = []
+            for spec in st.unit:
+                one = _block_cache(self.cfg, spec, batch, seq_len, dtype)
+                out.append(jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (st.repeats,) + x.shape).copy(), one))
+            return out
+        cache: dict = {"stages": [stage_cache(st) for st in self.stages],
+                       "pos": jnp.zeros((batch,), jnp.int32)}
+        if self.cfg.is_encoder_decoder:
+            cache["enc_out"] = jnp.zeros(
+                (batch, self.cfg.encoder_seq_len, self.cfg.d_model), dtype)
+        return cache
+
+    # ---------------- apply ----------------
+    def _constrain(self, x, mode):
+        if self.act_spec is not None and mode != "decode" and x.ndim == 3:
+            x = jax.lax.with_sharding_constraint(x, self.act_spec)
+        return x
+
+    def _run_stages(self, stages, stage_params, x, mode, cache_stages, pos,
+                    enc_out):
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        x = self._constrain(x, mode)
+        for si, (st, sp) in enumerate(zip(stages, stage_params)):
+            scache = cache_stages[si] if cache_stages is not None else None
+            if st.kind == "unroll":
+                ncs = []
+                for li, spec in enumerate(st.unit):
+                    c = scache[li] if scache is not None else None
+                    x, nc, aux = _block_apply(sp[li], x, spec, self.cfg, mode,
+                                              c, pos, enc_out)
+                    aux_total += aux
+                    ncs.append(nc)
+                new_caches.append(ncs)
+            else:
+                def body(carry, xs):
+                    h, auxc = carry
+                    lp, lc = xs
+                    ncs_u = []
+                    h = self._constrain(h, mode)
+                    for ui, spec in enumerate(st.unit):
+                        c = lc[ui] if lc is not None else None
+                        h, nc, aux = _block_apply(lp[ui], h, spec, self.cfg,
+                                                  mode, c, pos, enc_out)
+                        auxc += aux
+                        ncs_u.append(nc)
+                    return (h, auxc), ncs_u
+
+                if scache is None:
+                    # no cache: scan over params only
+                    def body_nc(carry, lp):
+                        return body(carry, (lp, [None] * len(st.unit)))[0], None
+                    if self.remat:
+                        body_nc = jax.checkpoint(
+                            body_nc, policy=self.remat_policy)
+                    (x, aux_total), _ = jax.lax.scan(body_nc, (x, aux_total), sp)
+                    new_caches.append(None)
+                else:
+                    (x, aux_total), ncs = jax.lax.scan(
+                        body, (x, aux_total), (sp, scache))
+                    new_caches.append(ncs)
+        return x, aux_total, new_caches
+
+    def encode(self, params, frames):
+        """Whisper encoder over stubbed frame embeddings (B, enc_len, d)."""
+        pos = jnp.arange(frames.shape[1])
+        h = frames + sinusoidal_pos(self.cfg.d_model, pos)[None].astype(frames.dtype)
+        h, _, _ = self._run_stages(self.enc_stages, params["enc_stages"], h,
+                                   "full", None, None, None)
+        return L.rms_norm(h, params["enc_norm"], self.cfg.norm_eps)
+
+    def embed_tokens(self, params, tokens):
+        e = params["embed"][tokens] * math.sqrt(self.cfg.d_model)
+        return e
+
+    def apply(self, params, tokens, *, mode: str = "full", cache=None,
+              prefix_embeds=None, enc_frames=None, return_hidden: bool = False,
+              stage_range: Optional[Tuple[int, int]] = None,
+              hidden_in=None, dtype=jnp.float32):
+        """Forward. mode: full (train/prefill) | decode (1 token + cache).
+        stage_range selects a sub-interval of stages (the paper's lower/upper
+        application); hidden_in feeds activations at a stage boundary."""
+        cfg = self.cfg
+        # mixed precision: master params stay f32 outside; compute in `dtype`
+        # (grads flow through the casts, so the optimizer sees f32 grads)
+        if dtype != jnp.float32:
+            params = jax.tree.map(
+                lambda x: x.astype(dtype)
+                if (hasattr(x, "dtype") and x.dtype == jnp.float32) else x,
+                params)
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            if mode == "decode":
+                enc_out = cache["enc_out"]
+            else:
+                assert enc_frames is not None
+                enc_out = self.encode(params, enc_frames.astype(dtype))
+
+        n_stages = len(self.stages)
+        lo, hi = stage_range if stage_range is not None else (0, n_stages)
+
+        if hidden_in is not None:
+            h = hidden_in
+            pos = cache["pos"] if cache is not None else None
+        elif mode == "decode":
+            pos = cache["pos"]
+            h = self.embed_tokens(params, tokens).astype(dtype)
+            if cfg.rope_theta == 0 and (cfg.is_encoder_decoder):
+                h = h + sinusoidal_pos(cfg.d_model, pos[:, None]).astype(dtype)
+        else:
+            pos = None
+            h = self.embed_tokens(params, tokens).astype(dtype)
+            if cfg.rope_theta == 0 and cfg.is_encoder_decoder:
+                h = h + sinusoidal_pos(
+                    cfg.d_model, jnp.arange(tokens.shape[1]))[None].astype(dtype)
+            if prefix_embeds is not None:       # VLM: prepend patch embeddings
+                pe = (prefix_embeds.astype(dtype) @ params["proj"].astype(dtype))
+                h = jnp.concatenate([pe, h], axis=1)
+
+        cache_stages = cache["stages"][lo:hi] if cache is not None else None
+        h, aux, new_stage_caches = self._run_stages(
+            self.stages[lo:hi], params["stages"][lo:hi], h, mode,
+            cache_stages, pos, enc_out)
+
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["stages"] = (cache["stages"][:lo] + new_stage_caches
+                                   + cache["stages"][hi:])
+            if hi == n_stages:
+                new_cache["pos"] = cache["pos"] + 1
+        if hi < n_stages or return_hidden:
+            return h, new_cache, aux
+
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = h @ params["embed"].T.astype(h.dtype)
+        else:
+            logits = h @ params["lm_head"].astype(h.dtype)
+        return logits, new_cache, aux
+
+    # ---------------- losses ----------------
+    def loss(self, params, batch, dtype=jnp.float32):
+        """Next-token CE. batch = (tokens, labels_unused) or dict with
+        prefix_embeds / enc_frames for vlm/audio."""
+        tokens, extras = self._unpack(batch)
+        logits, _, aux = self.apply(params, tokens, mode="full",
+                                    dtype=dtype, **extras)
+        # align: with prefix tokens, predictions for text start after prefix
+        p = self.cfg.num_prefix_tokens if extras.get("prefix_embeds") is not None else 0
+        logits = logits[:, p:, :]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], -1)[..., 0]
+        return nll.mean() + aux
+
+    def _unpack(self, batch):
+        if isinstance(batch, dict):
+            tokens = batch["tokens"]
+            extras = {k: batch[k] for k in ("prefix_embeds", "enc_frames")
+                      if k in batch}
+            return tokens, extras
+        tokens = batch[0] if isinstance(batch, (tuple, list)) else batch
+        return tokens, {}
+
+
+# --------------------------------------------------------------------------
+# the paper's SplitModel view over an LM
+# --------------------------------------------------------------------------
+def make_split_lm(cfg: ModelConfig, split_layer: Optional[int] = None,
+                  dtype=jnp.float32):
+    """SplitModel for a decoder LM: lower = embed + stages[:b], upper =
+    stages[b:] + final norm + head. The split layer is rounded to the nearest
+    stage-unit boundary (the paper also splits at a group boundary)."""
+    from repro.core.split import SplitModel
+
+    j = split_layer if split_layer is not None else cfg.split_layer
+    specs = layer_specs(cfg)
+    # round j to a boundary compatible with stage decomposition
+    base = decompose(specs, boundary=j)
+    lm = LM(cfg)
+    lm.stages = base                      # stage list with a break at j
+    boundary_stage = 0
+    acc = 0
+    for si, st in enumerate(base):
+        if acc >= j:
+            boundary_stage = si
+            break
+        acc += stage_layers(st)
+    else:
+        boundary_stage = len(base) - 1
+
+    def split(params):
+        lower = {"embed": params["embed"],
+                 "stages": params["stages"][:boundary_stage]}
+        if "proj" in params:
+            lower["proj"] = params["proj"]
+        upper = {"stages": params["stages"][boundary_stage:],
+                 "final_norm": params["final_norm"]}
+        if "lm_head" in params:
+            upper["lm_head"] = params["lm_head"]
+        if cfg.tie_embeddings:
+            upper["embed_head"] = params["embed"]
+        return lower, upper
+
+    def merge(lower, upper):
+        p = {"embed": lower["embed"],
+             "stages": list(lower["stages"]) + list(upper["stages"]),
+             "final_norm": upper["final_norm"]}
+        if "lm_head" in upper:
+            p["lm_head"] = upper["lm_head"]
+        if "proj" in lower:
+            p["proj"] = lower["proj"]
+        return p
+
+    def apply_lower(params_full, tokens):
+        h, _, _ = lm.apply(params_full, tokens, mode="full",
+                           stage_range=(0, boundary_stage), dtype=dtype)
+        return h
+
+    def apply_upper_from(upper, acts):
+        # rebuild a params view the LM understands
+        p = {"stages": [None] * boundary_stage + list(upper["stages"]),
+             "final_norm": upper["final_norm"],
+             "embed": upper.get("embed_head")}
+        if "lm_head" in upper:
+            p["lm_head"] = upper["lm_head"]
+        h, _, aux = lm.apply(p, None, mode="full", hidden_in=acts,
+                             stage_range=(boundary_stage, len(base)),
+                             dtype=dtype)
+        return h, aux
+
+    def apply_upper(params_full, acts):
+        _, upper = split(params_full)
+        logits, _ = apply_upper_from(upper, acts)
+        return logits
+
+    def full_apply(params, tokens):
+        logits, _, _ = lm.apply(params, tokens, mode="full", dtype=dtype)
+        return logits
+
+    def loss(params, batch):
+        return lm.loss(params, batch, dtype=dtype)
+
+    def upper_loss(upper, acts, targets):
+        logits, aux = apply_upper_from(upper, acts)
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        nll = -jnp.take_along_axis(lp, targets[:, 1:][..., None], -1)[..., 0]
+        return nll.mean(-1) + aux             # per-sample
+    return SplitModel(
+        config=cfg, split_layer=j, init=lm.init, apply=full_apply,
+        apply_lower=apply_lower, apply_upper=apply_upper, split=split,
+        merge=merge, loss=loss, upper_loss=upper_loss), lm

@@ -1,0 +1,142 @@
+"""Wide Residual Network (Zagoruyko & Komodakis) — the paper's global model.
+
+WRN-40-1: conv3x3(16) -> group1(16) -> group2(32,/2) -> group3(64,/2)
+          -> norm+relu -> global avg pool -> fc(10)
+(40-4)/6 = 6 basic blocks per group; paper splits after group 1, giving
+activation maps of 16 channels x 32 x 32 (§4.1).
+
+Normalization: BatchNorm with *batch statistics in both train and eval*
+(no running-stat aggregation — the standard choice in FL, where averaging
+client running stats is its own research problem; recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.wrn_cifar import WRNConfig
+from repro.models.layers import keygen
+
+PyTree = Any
+
+
+def conv_init(key, kh, kw, cin, cout):
+    scale = math.sqrt(2.0 / (kh * kw * cin))
+    return jax.random.normal(key, (kh, kw, cin, cout)) * scale
+
+
+def conv(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def batch_norm(x, scale, bias, eps=1e-5):
+    mean = x.mean((0, 1, 2))
+    var = x.var((0, 1, 2))
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def block_init(key, cin, cout):
+    ks = keygen(key)
+    p = {"bn1": _bn_init(cin), "conv1": conv_init(next(ks), 3, 3, cin, cout),
+         "bn2": _bn_init(cout), "conv2": conv_init(next(ks), 3, 3, cout, cout)}
+    if cin != cout:
+        p["shortcut"] = conv_init(next(ks), 1, 1, cin, cout)
+    return p
+
+
+def block_apply(p, x, stride: int):
+    h = jax.nn.relu(batch_norm(x, **p["bn1"]))
+    sc = conv(h, p["shortcut"], stride) if "shortcut" in p else x
+    h = conv(h, p["conv1"], stride)
+    h = jax.nn.relu(batch_norm(h, **p["bn2"]))
+    h = conv(h, p["conv2"], 1)
+    return h + sc
+
+
+def init_wrn(cfg: WRNConfig, key) -> PyTree:
+    ks = keygen(key)
+    n = cfg.blocks_per_group
+    widths = [16, 16 * cfg.widen, 32 * cfg.widen, 64 * cfg.widen]
+    params: dict = {"conv_in": conv_init(next(ks), 3, 3, cfg.channels, widths[0])}
+    for g in range(3):
+        cin = widths[g]
+        cout = widths[g + 1]
+        blocks = [block_init(next(ks), cin if b == 0 else cout, cout)
+                  for b in range(n)]
+        params[f"group{g + 1}"] = blocks
+    params["bn_out"] = _bn_init(widths[3])
+    params["fc_w"] = jax.random.normal(next(ks), (widths[3], cfg.num_classes)) \
+        / math.sqrt(widths[3])
+    params["fc_b"] = jnp.zeros((cfg.num_classes,))
+    return params
+
+
+def group_apply(blocks, x, stride: int):
+    for b, p in enumerate(blocks):
+        x = block_apply(p, x, stride if b == 0 else 1)
+    return x
+
+
+def wrn_lower(cfg: WRNConfig, params, x):
+    """conv_in + groups up to split_group -> the paper's activation maps."""
+    h = conv(x, params["conv_in"], 1)
+    for g in range(1, cfg.split_group + 1):
+        h = group_apply(params[f"group{g}"], h, 1 if g == 1 else 2)
+    return h
+
+
+def wrn_upper(cfg: WRNConfig, params, acts):
+    h = acts
+    for g in range(cfg.split_group + 1, 4):
+        h = group_apply(params[f"group{g}"], h, 2)
+    h = jax.nn.relu(batch_norm(h, **params["bn_out"]))
+    h = h.mean((1, 2))
+    return h @ params["fc_w"] + params["fc_b"]
+
+
+def wrn_apply(cfg: WRNConfig, params, x):
+    return wrn_upper(cfg, params, wrn_lower(cfg, params, x))
+
+
+def make_split_wrn(cfg: WRNConfig):
+    """SplitModel view (core.split) of the WRN at the paper's split point."""
+    from repro.core.split import SplitModel
+
+    lower_keys = ["conv_in"] + [f"group{g}" for g in range(1, cfg.split_group + 1)]
+
+    def split(params):
+        lower = {k: params[k] for k in lower_keys}
+        upper = {k: v for k, v in params.items() if k not in lower_keys}
+        return lower, upper
+
+    def merge(lower, upper):
+        return {**lower, **upper}
+
+    def loss(params, batch):
+        x, y = batch
+        logits = wrn_apply(cfg, params, x)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        return -jnp.take_along_axis(lp, y[:, None], -1).mean()
+
+    def upper_loss(upper_params, acts, targets):
+        # upper params may lack lower keys; wrn_upper only touches upper ones
+        logits = wrn_upper(cfg, upper_params, acts)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        return -jnp.take_along_axis(lp, targets[:, None], -1)[:, 0]  # per-sample
+
+    return SplitModel(
+        config=cfg, split_layer=cfg.split_group,
+        init=lambda key: init_wrn(cfg, key),
+        apply=lambda p, x: wrn_apply(cfg, p, x),
+        apply_lower=lambda p, x: wrn_lower(cfg, p, x),
+        apply_upper=lambda p, a: wrn_upper(cfg, p, a),
+        split=split, merge=merge, loss=loss, upper_loss=upper_loss)

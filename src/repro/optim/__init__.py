@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (Optimizer, sgd, adamw, apply_l2,
+                                    global_norm, clip_by_global_norm)
+from repro.optim.schedule import (constant, cosine_decay, warmup_cosine,
+                                  step_decay)
+
+__all__ = ["Optimizer", "sgd", "adamw", "apply_l2", "global_norm",
+           "clip_by_global_norm", "constant", "cosine_decay",
+           "warmup_cosine", "step_decay"]

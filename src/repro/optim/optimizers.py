@@ -1,0 +1,108 @@
+"""Minimal optax-style optimizers as pure pytree transforms.
+
+The paper trains with SGD (lr 0.1) and studies L2 regularization
+(Tables 6/7); AdamW is provided for the LM substrate. Everything is a pair
+of pure functions so it composes with vmap (stacked FL clients), shard_map
+and lax.scan (local-update loops).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple]       # (grads, state, params, step|None) -> (updates, state)
+
+    def apply(self, grads, state, params, step=None):
+        updates, state = self.update(grads, state, params, step)
+        new_params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+        return new_params, state
+
+
+def _as_lr(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    """SGD with optional (decoupled) weight decay == the paper's L2 term."""
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step=None):
+        lr_t = _as_lr(lr, step)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype),
+                                 grads, params)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr_t * g, grads), ()
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -(lr_t * (momentum * m + g)), new_m, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr_t * m, new_m)
+        return upd, new_m
+
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jnp.ndarray
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return AdamState(jax.tree.map(jnp.zeros_like, params),
+                         jax.tree.map(jnp.zeros_like, params),
+                         jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, step=None):
+        count = state.count + 1
+        lr_t = _as_lr(lr, count if step is None else step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def u(m, v, p):
+            step_ = m / c1 / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(step_.dtype)
+            return -lr_t * step_
+
+        return jax.tree.map(u, mu, nu, params), AdamState(mu, nu, count)
+
+    return Optimizer(init, update)
+
+
+def apply_l2(loss: jnp.ndarray, params: PyTree, l2: float) -> jnp.ndarray:
+    """Explicit L2 penalty added to the loss (paper Tables 6/7 formulation)."""
+    if not l2:
+        return loss
+    sq = sum(jnp.sum(jnp.square(p.astype(jnp.float32)))
+             for p in jax.tree.leaves(params))
+    return loss + l2 * sq
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)

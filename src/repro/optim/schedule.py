@@ -1,0 +1,33 @@
+"""Learning-rate schedules as step -> lr callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def f(step):
+        t = jnp.clip(step / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * ((1 - alpha) * cos + alpha)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int,
+                  alpha: float = 0.0):
+    cos = cosine_decay(lr, max(decay_steps - warmup_steps, 1), alpha)
+    def f(step):
+        warm = lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return f
+
+
+def step_decay(lr: float, boundaries, factor: float = 0.1):
+    bs = jnp.asarray(boundaries)
+    def f(step):
+        k = jnp.sum(step >= bs)
+        return lr * factor ** k
+    return f

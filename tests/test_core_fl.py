@@ -1,0 +1,163 @@
+"""Integration tests for the paper's core: split network, FedAvg, metadata
+selection, meta-training, compose (Algorithm 1) — on the WRN and a tiny LM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig, get_config, get_wrn_config
+from repro.core import fedavg as fa
+from repro.core.compose import evaluate
+from repro.core.meta_training import meta_train
+from repro.core.rounds import run_round
+from repro.data import SyntheticImageDataset, partition_k_shards
+from repro.models.transformer import make_split_lm
+from repro.models.wrn import make_split_wrn
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def wrn():
+    cfg = get_wrn_config().reduced()
+    model = make_split_wrn(cfg)
+    params = model.init(KEY)
+    return cfg, model, params
+
+
+class TestSplitMerge:
+    def test_wrn_split_roundtrip(self, wrn):
+        _, model, params = wrn
+        lower, upper = model.split(params)
+        merged = model.merge(lower, upper)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(merged)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_wrn_lower_upper_equals_full(self, wrn):
+        cfg, model, params = wrn
+        x = jax.random.normal(KEY, (4, cfg.image_size, cfg.image_size, 3))
+        full = model.apply(params, x)
+        acts = model.apply_lower(params, x)
+        # paper §4.1: activation maps after group 1 keep spatial dims
+        assert acts.shape == (4, cfg.image_size, cfg.image_size, 16)
+        two_stage = model.apply_upper(params, acts)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(two_stage),
+                                   atol=1e-5)
+
+    def test_lm_split_roundtrip_and_equivalence(self):
+        cfg = get_config("llama3.2-1b").reduced()
+        model, lm = make_split_lm(cfg)
+        params = model.init(KEY)
+        lower, upper = model.split(params)
+        toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+        full = model.apply(params, toks)
+        acts = model.apply_lower(params, toks)
+        logits = model.apply_upper(params, acts)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(logits),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestFedAvg:
+    def test_weight_average_eq2(self, wrn):
+        _, model, params = wrn
+        ps = [jax.tree.map(lambda x: x + i, params) for i in range(3)]
+        avg = fa.weight_average(ps)
+        for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b) + 1.0,
+                                       atol=1e-5)
+
+    def test_weighted_average(self, wrn):
+        _, model, params = wrn
+        ps = [jax.tree.map(jnp.zeros_like, params),
+              jax.tree.map(jnp.ones_like, params)]
+        avg = fa.weight_average(ps, weights=[1, 3])
+        assert abs(float(jax.tree.leaves(avg)[0].mean()) - 0.75) < 1e-6
+
+    def test_stacked_equals_list(self, wrn):
+        _, model, params = wrn
+        ps = [jax.tree.map(lambda x, i=i: x * i, params) for i in range(4)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+        a = fa.weight_average(ps)
+        b = fa.weight_average_stacked(stacked)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6)
+
+    def test_local_update_descends(self, wrn):
+        cfg, model, params = wrn
+        from repro.optim import sgd
+        x = jax.random.normal(KEY, (3, 16, cfg.image_size, cfg.image_size, 3))
+        y = jax.random.randint(KEY, (3, 16), 0, 10)
+        opt = sgd(0.05)
+        _, _, losses = fa.local_update(params, opt, opt.init(params), (x, y),
+                                       lambda p, b: model.loss(p, b))
+        assert losses.shape == (3,)
+        assert float(losses[-1]) < float(losses[0]) + 0.5
+
+
+class TestMetaTraining:
+    def test_meta_train_fits_small_set(self, wrn):
+        """The paper's overfitting observation (Fig 2): the upper part can
+        drive training loss down on a few hundred maps."""
+        cfg, model, params = wrn
+        _, upper0 = model.split(params)
+        rng = np.random.default_rng(0)
+        acts = jnp.asarray(rng.normal(size=(40, cfg.image_size,
+                                            cfg.image_size, 16)),
+                           jnp.float32)
+        ys = jnp.asarray(rng.integers(0, 10, 40))
+        upper, losses = meta_train(upper0, model.upper_loss, acts, ys,
+                                   epochs=30, batch_size=20, lr=0.05,
+                                   key=KEY)
+        assert float(losses[-5:].mean()) < float(losses[:5].mean())
+
+    def test_l2_regularization_shrinks_weights(self, wrn):
+        cfg, model, params = wrn
+        _, upper0 = model.split(params)
+        rng = np.random.default_rng(0)
+        acts = jnp.asarray(rng.normal(size=(20, cfg.image_size,
+                                            cfg.image_size, 16)), jnp.float32)
+        ys = jnp.asarray(rng.integers(0, 10, 20))
+        up_l2, _ = meta_train(upper0, model.upper_loss, acts, ys, epochs=20,
+                              batch_size=20, lr=0.05, l2=0.01, key=KEY)
+        up_0, _ = meta_train(upper0, model.upper_loss, acts, ys, epochs=20,
+                             batch_size=20, lr=0.05, l2=0.0, key=KEY)
+        n_l2 = sum(float(jnp.sum(x ** 2)) for x in jax.tree.leaves(up_l2))
+        n_0 = sum(float(jnp.sum(x ** 2)) for x in jax.tree.leaves(up_0))
+        assert n_l2 < n_0
+
+
+class TestAlgorithm1:
+    def test_round_end_to_end(self, wrn):
+        cfg, model, params = wrn
+        ds = SyntheticImageDataset(400, image_size=cfg.image_size, seed=0)
+        clients = partition_k_shards(ds, 3, k_classes=2,
+                                     samples_per_client=60)
+        flcfg = FLConfig(num_clients=3, clients_per_round=3,
+                         local_batch_size=20, pca_components=16,
+                         clusters_per_class=3, kmeans_iters=5,
+                         meta_epochs=2, meta_batch_size=10)
+        _, upper0 = model.split(params)
+        res = run_round(model, params, upper0, clients, flcfg, KEY)
+        # |D_M| <= clients * classes-per-client * clusters
+        assert 0 < res.metadata_count <= 3 * 10 * 3
+        assert res.total_samples == 180
+        # selection really is a small fraction of the data (the paper's point)
+        assert res.metadata_count / res.total_samples < 0.2
+        assert np.isfinite(res.client_losses).all()
+
+    def test_without_selection_uploads_everything(self, wrn):
+        cfg, model, params = wrn
+        from repro.fl.comms import CommLedger
+        from repro.core.rounds import client_round
+        ds = SyntheticImageDataset(100, image_size=cfg.image_size, seed=0)
+        clients = partition_k_shards(ds, 1, k_classes=2,
+                                     samples_per_client=40)
+        led_sel, led_all = CommLedger(), CommLedger()
+        fl_sel = FLConfig(clusters_per_class=3, pca_components=8,
+                          kmeans_iters=3, local_batch_size=20)
+        fl_all = FLConfig(use_selection=False, local_batch_size=20)
+        client_round(model, params, clients[0], fl_sel, KEY, led_sel, 10)
+        client_round(model, params, clients[0], fl_all, KEY, led_all, 10)
+        # the paper's communication claim: selection shrinks metadata upload
+        assert led_sel.up["metadata"] < led_all.up["metadata"] / 2

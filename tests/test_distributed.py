@@ -1,0 +1,173 @@
+"""Distributed-step tests on a subprocess smoke mesh (4-8 host devices):
+the stacked-clients FedAvg train step EXECUTES and matches the sequential
+simulator's math; dryrun lowers for representative pairs.
+
+These spawn subprocesses because jax pins the host device count at first
+init (the main pytest process must keep seeing 1 device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 560):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_train_step_executes_and_fedavg_synchronizes():
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, TrainConfig
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import make_train_step
+
+cfg = get_config("llama3.2-1b").reduced()
+tcfg = TrainConfig(local_steps=2, microbatch=2, split_fl=True, meta_clusters=2,
+                   pca_components=4, remat=False, dtype="float32")
+mesh = make_smoke_mesh()
+step, lm = make_train_step(cfg, tcfg)
+shape = ShapeConfig("t", 16, 4, "train")
+specs = input_specs(cfg, shape, mesh, tcfg, lm=lm)
+g = specs["g"]
+params0 = lm.init(jax.random.PRNGKey(0))
+cp = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (g,)+x.shape), params0)
+with mesh:
+    jit_step = jax.jit(step)
+    tok = jax.random.randint(jax.random.PRNGKey(1),
+                             specs["batch"]["tokens"].shape, 0, cfg.vocab_size)
+    new_cp, _, metrics = jit_step(cp, (), {"tokens": tok}, jax.random.PRNGKey(2))
+loss = float(metrics["loss"])
+assert np.isfinite(loss), loss
+# FedAvg redistribution: all cohorts leave with identical weights
+leaf = np.asarray(jax.tree.leaves(new_cp)[0])
+for i in range(1, leaf.shape[0]):
+    np.testing.assert_allclose(leaf[0], leaf[i], rtol=1e-5, atol=1e-6)
+# weights actually changed
+old = np.asarray(jax.tree.leaves(cp)[0])
+assert not np.allclose(leaf, old)
+print("OK", loss, float(metrics.get("selected", -1)))
+"""
+    r = run_py(code)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_fedavg_step_matches_sequential_math():
+    """G cohorts, local_steps=1, no split-fl: the lowered step must equal
+    plain per-cohort SGD then mean (computed sequentially in numpy)."""
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, TrainConfig
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import make_train_step
+from repro.optim import sgd
+
+cfg = get_config("qwen2-0.5b").reduced()
+tcfg = TrainConfig(local_steps=1, microbatch=4, split_fl=False,
+                   remat=False, dtype="float32", lr=0.1)
+mesh = make_smoke_mesh()
+step, lm = make_train_step(cfg, tcfg)
+shape = ShapeConfig("t", 16, 8, "train")
+specs = input_specs(cfg, shape, mesh, tcfg, lm=lm)
+g = specs["g"]
+params0 = lm.init(jax.random.PRNGKey(0))
+cp = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (g,)+x.shape), params0)
+tok = jax.random.randint(jax.random.PRNGKey(1),
+                         specs["batch"]["tokens"].shape, 0, cfg.vocab_size)
+with mesh:
+    new_cp, _, m = jax.jit(step)(cp, (), {"tokens": tok}, jax.random.PRNGKey(2))
+
+# sequential reference
+opt = sgd(0.1)
+client_ps = []
+for c in range(g):
+    p = params0
+    grads = jax.grad(lambda p_: lm.loss(p_, {"tokens": tok[c,0,0]}))(p)
+    # grad accumulation over micro steps
+    for mi in range(1, tok.shape[2]):
+        g2 = jax.grad(lambda p_: lm.loss(p_, {"tokens": tok[c,0,mi]}))(p)
+        grads = jax.tree.map(jnp.add, grads, g2)
+    grads = jax.tree.map(lambda x: x / tok.shape[2], grads)
+    p, _ = opt.apply(grads, opt.init(p), p)
+    client_ps.append(p)
+avg = jax.tree.map(lambda *xs: sum(xs)/len(xs), *client_ps)
+got = jax.tree.map(lambda x: np.asarray(x[0]), new_cp)
+ref_l = jax.tree.leaves(avg); got_l = jax.tree.leaves(got)
+err = max(float(np.abs(np.asarray(a)-np.asarray(b)).max()) for a,b in zip(ref_l, got_l))
+assert err < 2e-4, err
+print("OK maxerr", err)
+"""
+    r = run_py(code)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("gemma3-4b", "long_500k"),
+    ("qwen3-moe-30b-a3b", "decode_32k"),
+    ("rwkv6-3b", "prefill_32k"),
+])
+def test_dryrun_smoke_subprocess(arch, shape):
+    env = dict(os.environ, _REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke",
+         "--arch", arch, "--shape", shape, "--out", "/tmp/dryrun_test"],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, (r.stdout + r.stderr)[-2500:]
+    assert "[ok]" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_smoke():
+    env = dict(os.environ, _REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--smoke", "--multipod",
+         "--arch", "llama3.2-1b", "--shape", "train_4k",
+         "--out", "/tmp/dryrun_test"],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, (r.stdout + r.stderr)[-2500:]
+    assert "[ok]" in r.stdout
+
+
+def test_hlo_parser_units():
+    from repro.launch.hlo_analysis import parse_hlo
+    hlo = '''
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %a = f32[128,256]{1,0} get-tuple-element(%p), index=1
+  %b = f32[256,64]{1,0} constant(0)
+  %d = f32[128,64]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,64]{1,0} all-reduce(%d), to_apply=%add
+  ROOT %t = (s32[], f32[128,256]) tuple(%i, %a)
+}
+
+ENTRY %main () -> f32[] {
+  %init = (s32[], f32[128,256]) tuple(...)
+  %w = (s32[], f32[128,256]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %r = f32[] constant(0)
+}
+'''
+    c = parse_hlo(hlo)
+    # dot: 2*128*64*256 = 4.19e6 per trip, 10 trips
+    assert abs(c.flops - 2 * 128 * 64 * 256 * 10) / c.flops < 1e-6
+    assert c.coll_count.get("all-reduce") == 10
+    assert c.coll_bytes["all-reduce"] == 128 * 64 * 4 * 10

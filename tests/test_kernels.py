@@ -1,0 +1,132 @@
+"""Per-kernel shape/dtype sweeps asserting allclose vs the ref.py oracles
+(interpret mode on CPU — the brief's validation contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- kmeans
+@pytest.mark.parametrize("n,d,k", [
+    (64, 16, 4), (300, 200, 10), (256, 128, 32), (100, 37, 7), (512, 200, 20),
+])
+def test_kmeans_dist_matches_ref(n, d, k):
+    x = _rand(KEY, (n, d), jnp.float32)
+    c = _rand(jax.random.PRNGKey(1), (k, d), jnp.float32)
+    got = ops.kmeans_pairwise_dist(x, c)
+    want = ref.kmeans_pairwise_dist_ref(x, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 128), d=st.integers(1, 64), k=st.integers(1, 16),
+       seed=st.integers(0, 999))
+def test_kmeans_dist_property(n, d, k, seed):
+    kk = jax.random.PRNGKey(seed)
+    x = _rand(kk, (n, d), jnp.float32)
+    c = _rand(jax.random.fold_in(kk, 1), (k, d), jnp.float32)
+    got = np.asarray(ops.kmeans_pairwise_dist(x, c))
+    want = np.asarray(ref.kmeans_pairwise_dist_ref(x, c))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+    assert (got > -1e-3).all()            # squared distances non-negative
+
+
+# ---------------------------------------------------------------- flash attn
+@pytest.mark.parametrize("b,s,h,kv,d,causal,window,dtype", [
+    (2, 256, 8, 4, 64, True, 0, jnp.float32),
+    (1, 256, 4, 4, 128, True, 64, jnp.float32),
+    (2, 128, 8, 2, 32, False, 0, jnp.float32),
+    (1, 512, 8, 8, 64, True, 128, jnp.float32),
+    (2, 256, 4, 1, 64, True, 0, jnp.bfloat16),    # MQA, bf16
+    (1, 384, 6, 2, 96, True, 0, jnp.float32),     # non-pow2 seq + head dim
+])
+def test_flash_attention_matches_ref(b, s, h, kv, d, causal, window, dtype):
+    q = _rand(KEY, (b, s, h, d), dtype)
+    k = _rand(jax.random.PRNGKey(1), (b, s, kv, d), dtype)
+    v = _rand(jax.random.PRNGKey(2), (b, s, kv, d), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=128, block_k=128)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_equals_model_chunked_path():
+    """kernel == the pure-jnp chunked attention used inside the models."""
+    from repro.models.layers import sdpa_chunked
+    q = _rand(KEY, (2, 256, 8, 64), jnp.float32)
+    k = _rand(jax.random.PRNGKey(1), (2, 256, 4, 64), jnp.float32)
+    v = _rand(jax.random.PRNGKey(2), (2, 256, 4, 64), jnp.float32)
+    a = ops.flash_attention(q, k, v, causal=True, window=32,
+                            block_q=128, block_k=128)
+    b = sdpa_chunked(q, k, v, causal=True, window=32, chunk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+# ---------------------------------------------------------------- decode
+@pytest.mark.parametrize("b,s,h,kv,d,fill,dtype", [
+    (2, 512, 8, 4, 64, 256, jnp.float32),
+    (1, 300, 4, 2, 128, 300, jnp.float32),
+    (4, 1024, 8, 8, 64, 17, jnp.float32),
+    (2, 256, 16, 2, 64, 128, jnp.bfloat16),
+])
+def test_flash_decode_matches_ref(b, s, h, kv, d, fill, dtype):
+    q = _rand(KEY, (b, 1, h, d), dtype)
+    kc = _rand(jax.random.PRNGKey(1), (b, s, kv, d), dtype)
+    vc = _rand(jax.random.PRNGKey(2), (b, s, kv, d), dtype)
+    valid = jnp.arange(s)[None, :] < fill
+    valid = jnp.broadcast_to(valid, (b, s))
+    got = ops.flash_decode(q, kc, vc, valid, block_s=128)
+    want = ref.flash_decode_ref(q, kc, vc, valid)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_matches_full_attention_last_token():
+    """flash-decode(q_T | K,V up to T) == causal full attention's last row."""
+    b, s, h, kv, d = 1, 128, 4, 2, 32
+    q = _rand(KEY, (b, s, h, d), jnp.float32)
+    k = _rand(jax.random.PRNGKey(1), (b, s, kv, d), jnp.float32)
+    v = _rand(jax.random.PRNGKey(2), (b, s, kv, d), jnp.float32)
+    full = ref.flash_attention_ref(q, k, v, causal=True)
+    valid = jnp.ones((b, s), bool)
+    dec = ops.flash_decode(q[:, -1:], k, v, valid, block_s=64)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-3)
+
+
+# ---------------------------------------------------------------- flash vjp
+@pytest.mark.parametrize("causal,window,kv", [(True, 0, 4), (True, 64, 2),
+                                              (False, 0, 8)])
+def test_flash_custom_vjp_matches_autodiff(causal, window, kv):
+    """sdpa_chunked's hand-written backward (recompute-in-bwd, §Perf H1.4)
+    must match autodiff of the direct attention."""
+    from repro.models.layers import sdpa_chunked, sdpa_full
+    b, s, h, d = 2, 128, 8, 32
+    q = _rand(KEY, (b, s, h, d), jnp.float32)
+    k = _rand(jax.random.PRNGKey(1), (b, s, kv, d), jnp.float32)
+    v = _rand(jax.random.PRNGKey(2), (b, s, kv, d), jnp.float32)
+    f1 = lambda *a: jnp.sum(jnp.cos(sdpa_chunked(
+        *a, causal=causal, window=window, chunk=32)))
+    f2 = lambda *a: jnp.sum(jnp.cos(sdpa_full(
+        *a, causal=causal, window=window)))
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,174 @@
+"""Unit + property tests for the paper's §3.1 selection pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (kmeans, pca_fit, pca_transform,
+                                  representatives, select_metadata,
+                                  selected_fraction)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestPCA:
+    def test_reconstruction_identity_when_full_rank(self):
+        x = np.random.default_rng(0).normal(size=(50, 8)).astype(np.float32)
+        st_ = pca_fit(jnp.asarray(x), 8)
+        z = pca_transform(st_, jnp.asarray(x))
+        xr = z @ st_.components + st_.mean
+        np.testing.assert_allclose(np.asarray(xr), x, atol=1e-3)
+
+    def test_components_orthonormal(self):
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(40, 100)),
+                        jnp.float32)
+        st_ = pca_fit(x, 10)
+        g = np.asarray(st_.components @ st_.components.T)
+        np.testing.assert_allclose(g, np.eye(10), atol=1e-3)
+
+    def test_gram_vs_cov_paths_agree(self):
+        # n<d triggers the Gram trick; n>d the covariance path
+        rng = np.random.default_rng(2)
+        base = rng.normal(size=(300, 20)).astype(np.float32)
+        st_small = pca_fit(jnp.asarray(base[:15]), 4)     # gram
+        st_big = pca_fit(jnp.asarray(base), 4)            # cov
+        # both must capture descending variance
+        assert np.all(np.diff(np.asarray(st_small.explained)) <= 1e-4)
+        assert np.all(np.diff(np.asarray(st_big.explained)) <= 1e-4)
+
+    def test_variance_ordering_dominant_direction(self):
+        rng = np.random.default_rng(3)
+        x = np.concatenate([rng.normal(0, 10, (200, 1)),
+                            rng.normal(0, 0.1, (200, 5))], 1).astype(np.float32)
+        st_ = pca_fit(jnp.asarray(x), 2)
+        c0 = np.abs(np.asarray(st_.components[0]))
+        assert c0[0] > 0.99   # first component = the high-variance axis
+
+    def test_mask_excludes_rows(self):
+        x = np.zeros((10, 4), np.float32)
+        x[5:] = 1000.0   # garbage rows, masked out
+        mask = jnp.asarray([True] * 5 + [False] * 5)
+        st_ = pca_fit(jnp.asarray(x), 2, mask=mask)
+        assert float(jnp.abs(st_.mean).max()) < 1e-3
+
+
+class TestKMeans:
+    def test_separated_clusters_found(self):
+        rng = np.random.default_rng(0)
+        centers = np.array([[0, 0], [10, 10], [-10, 10]], np.float32)
+        x = np.concatenate([c + rng.normal(0, .3, (50, 2)) for c in centers])
+        km = kmeans(jnp.asarray(x, jnp.float32), 3, KEY, iters=20)
+        # each true cluster maps to exactly one centroid
+        found = np.asarray(km.centroids)
+        d = np.linalg.norm(found[:, None] - centers[None], axis=-1).min(0)
+        assert d.max() < 1.0
+        assert np.asarray(km.cluster_sizes).sum() == 150
+
+    def test_assignment_is_nearest(self):
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(64, 5)),
+                        jnp.float32)
+        km = kmeans(x, 4, KEY, iters=10)
+        d = ((np.asarray(x)[:, None] - np.asarray(km.centroids)[None]) ** 2
+             ).sum(-1)
+        np.testing.assert_array_equal(d.argmin(1), np.asarray(km.assignment))
+
+    def test_mask_keeps_invalid_out_of_centroids(self):
+        rng = np.random.default_rng(2)
+        x = np.concatenate([rng.normal(0, 1, (30, 3)),
+                            np.full((10, 3), 1e4)]).astype(np.float32)
+        mask = jnp.asarray([True] * 30 + [False] * 10)
+        km = kmeans(jnp.asarray(x), 3, KEY, iters=10, mask=mask)
+        assert float(jnp.abs(km.centroids).max()) < 100.0
+
+    def test_representatives_belong_to_their_cluster(self):
+        x = jnp.asarray(np.random.default_rng(3).normal(size=(80, 4)),
+                        jnp.float32)
+        km = kmeans(x, 5, KEY, iters=10)
+        reps = representatives(x, km)
+        for j, r in enumerate(np.asarray(reps)):
+            if np.asarray(km.cluster_sizes)[j] > 0:
+                assert int(np.asarray(km.assignment)[r]) == j
+
+
+class TestSelectMetadata:
+    def test_paper_shape_contract(self):
+        """20 clusters/class x 10 classes -> 200 selected (Table 5 setup)."""
+        rng = np.random.default_rng(0)
+        acts = rng.normal(size=(500, 6, 6, 4)).astype(np.float32)
+        labels = rng.integers(0, 10, 500)
+        s = select_metadata(jnp.asarray(acts), jnp.asarray(labels), KEY,
+                            num_classes=10, clusters_per_class=20,
+                            pca_components=32, kmeans_iters=5)
+        assert s.indices.shape == (200,)
+        frac = float(selected_fraction(s, 500))
+        assert 0 < frac <= 0.41
+
+    def test_selected_indices_have_right_class(self):
+        rng = np.random.default_rng(1)
+        acts = rng.normal(size=(200, 16)).astype(np.float32)
+        labels = rng.integers(0, 4, 200)
+        s = select_metadata(jnp.asarray(acts), jnp.asarray(labels), KEY,
+                            num_classes=4, clusters_per_class=5,
+                            pca_components=8, kmeans_iters=5)
+        idx = np.asarray(s.indices).reshape(4, 5)
+        valid = np.asarray(s.valid).reshape(4, 5)
+        for c in range(4):
+            for j in range(5):
+                if valid[c, j]:
+                    assert labels[idx[c, j]] == c
+
+    def test_unlabeled_mode(self):
+        acts = jnp.asarray(np.random.default_rng(2).normal(size=(100, 32)),
+                           jnp.float32)
+        s = select_metadata(acts, None, KEY, per_class=False,
+                            clusters_per_class=8, pca_components=16,
+                            kmeans_iters=5)
+        assert s.indices.shape == (8,)
+
+    def test_mode_coverage_on_structured_data(self):
+        """Clients with clustered data: every mode contributes a rep."""
+        rng = np.random.default_rng(3)
+        modes = rng.normal(0, 5, (4, 24)).astype(np.float32)
+        which = rng.integers(0, 4, 400)
+        acts = modes[which] + rng.normal(0, .2, (400, 24)).astype(np.float32)
+        s = select_metadata(jnp.asarray(acts), None, KEY, per_class=False,
+                            clusters_per_class=4, pca_components=8,
+                            kmeans_iters=15)
+        sel_modes = set(which[np.asarray(s.indices)])
+        assert len(sel_modes) == 4   # one representative per true mode
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(8, 60), d=st.integers(2, 30), k=st.integers(1, 6),
+       seed=st.integers(0, 2 ** 16))
+def test_property_kmeans_invariants(n, d, k, seed):
+    """For any data: assignments in range, sizes sum to N, own-centroid
+    distance is minimal among centroids."""
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n, d)),
+                    jnp.float32)
+    km = kmeans(x, k, jax.random.PRNGKey(seed), iters=5)
+    a = np.asarray(km.assignment)
+    assert ((0 <= a) & (a < k)).all()
+    assert int(np.asarray(km.cluster_sizes).sum()) == n
+    d_all = ((np.asarray(x)[:, None] - np.asarray(km.centroids)[None]) ** 2
+             ).sum(-1)
+    np.testing.assert_allclose(d_all.min(1), np.asarray(km.distances),
+                               rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 50), d=st.integers(4, 40), p=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 16))
+def test_property_pca_projection_shrinks(n, d, p, seed):
+    """Projection residual never exceeds total variance; explained variances
+    are non-negative and descending."""
+    p = min(p, n - 1, d)
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n, d)),
+                    jnp.float32)
+    st_ = pca_fit(x, p)
+    ev = np.asarray(st_.explained)
+    assert (ev >= -1e-4).all()
+    assert (np.diff(ev) <= 1e-3).all()
+    z = pca_transform(st_, x)
+    assert np.isfinite(np.asarray(z)).all()

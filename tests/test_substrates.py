@@ -1,0 +1,167 @@
+"""Substrate tests: optimizers, schedules, checkpointing, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.data import (BatchIterator, SyntheticImageDataset,
+                        SyntheticTokenDataset, partition_dirichlet,
+                        partition_k_shards)
+from repro.optim import (adamw, apply_l2, clip_by_global_norm, constant,
+                         cosine_decay, global_norm, sgd, step_decay,
+                         warmup_cosine)
+
+
+class TestOptim:
+    def _quad(self):
+        params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.0)}
+        loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+        return params, loss
+
+    def test_sgd_converges_quadratic(self):
+        p, loss = self._quad()
+        opt = sgd(0.1)
+        s = opt.init(p)
+        for _ in range(100):
+            g = jax.grad(loss)(p)
+            p, s = opt.apply(g, s, p)
+        assert float(loss(p)) < 1e-6
+
+    def test_sgd_momentum_faster_than_plain(self):
+        p0, loss = self._quad()
+        def run(opt, n=15):
+            p = p0
+            s = opt.init(p)
+            for _ in range(n):
+                p, s = opt.apply(jax.grad(loss)(p), s, p)
+            return float(loss(p))
+        assert run(sgd(0.05, momentum=0.9)) < run(sgd(0.05))
+
+    def test_adamw_converges(self):
+        p, loss = self._quad()
+        opt = adamw(0.1)
+        s = opt.init(p)
+        for _ in range(200):
+            p, s = opt.apply(jax.grad(loss)(p), s, p)
+        assert float(loss(p)) < 1e-4
+
+    def test_weight_decay_shrinks(self):
+        p = {"w": jnp.ones(4)}
+        opt = sgd(0.1, weight_decay=0.5)
+        s = opt.init(p)
+        g = {"w": jnp.zeros(4)}
+        p, _ = opt.apply(g, s, p)
+        assert float(p["w"][0]) == pytest.approx(0.95)
+
+    def test_l2_penalty_value(self):
+        p = {"w": jnp.ones(4)}
+        assert float(apply_l2(jnp.array(1.0), p, 0.001)) == pytest.approx(1.004)
+
+    def test_clip_global_norm(self):
+        g = {"a": jnp.full(4, 10.0)}
+        c = clip_by_global_norm(g, 1.0)
+        assert float(global_norm(c)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_schedules(self):
+        assert float(constant(0.1)(100)) == pytest.approx(0.1)
+        cd = cosine_decay(1.0, 100)
+        assert float(cd(0)) == pytest.approx(1.0)
+        assert float(cd(100)) == pytest.approx(0.0, abs=1e-6)
+        wc = warmup_cosine(1.0, 10, 110)
+        assert float(wc(5)) == pytest.approx(0.5)
+        sd = step_decay(1.0, [10, 20], 0.1)
+        assert float(sd(15)) == pytest.approx(0.1)
+        assert float(sd(25)) == pytest.approx(0.01)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = {"layers": [{"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+                           {"w": np.ones((4,), np.float32)}],
+                "step": np.int32(7)}
+        save_checkpoint(str(tmp_path), 3, tree, {"note": "x"})
+        got, meta = restore_checkpoint(str(tmp_path), tree)
+        assert meta["step"] == 3 and meta["note"] == "x"
+        np.testing.assert_array_equal(got["layers"][0]["w"],
+                                      tree["layers"][0]["w"])
+
+    def test_manager_keeps_last_k(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), max_to_keep=2)
+        tree = {"w": np.zeros(3, np.float32)}
+        for i in range(5):
+            mgr.save(i, tree)
+        files = sorted(os.listdir(tmp_path))
+        assert len(files) == 2 and mgr.latest == 4
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        save_checkpoint(str(tmp_path), 0, {"w": np.zeros(3, np.float32)})
+        with pytest.raises(ValueError):
+            restore_checkpoint(str(tmp_path), {"w": np.zeros(4, np.float32)})
+
+    def test_jax_arrays_roundtrip(self, tmp_path):
+        tree = {"w": jnp.arange(4, dtype=jnp.bfloat16)}
+        save_checkpoint(str(tmp_path), 1, tree)
+        got, _ = restore_checkpoint(str(tmp_path), tree)
+        assert got["w"].dtype == jnp.bfloat16
+
+
+class TestData:
+    def test_k_shards_matches_paper_setup(self):
+        """§4.1: 20 clients, 2500 images each, 2 classes per client."""
+        ds = SyntheticImageDataset(60_000, image_size=8, seed=0)
+        clients = partition_k_shards(ds, 20, k_classes=2,
+                                     samples_per_client=2500)
+        assert len(clients) == 20
+        for c in clients:
+            assert len(c.data) == 2500
+            assert len(np.unique(c.data.y)) <= 2
+
+    def test_dirichlet_partitions_everything_once(self):
+        ds = SyntheticImageDataset(2000, image_size=8, seed=0)
+        clients = partition_dirichlet(ds, 10, alpha=0.5, seed=0)
+        total = sum(len(c.data) for c in clients)
+        assert total == 2000
+
+    def test_image_dataset_has_cluster_structure(self):
+        """Within-class K-means must beat random grouping (selection needs
+        real modes to find)."""
+        ds = SyntheticImageDataset(600, image_size=16, modes_per_class=3,
+                                   num_classes=4, seed=0)
+        x = ds.x[ds.y == 0].reshape(np.sum(ds.y == 0), -1)
+        from repro.core.selection import kmeans
+        km = kmeans(jnp.asarray(x), 3, jax.random.PRNGKey(0), iters=20)
+        inertia = float(km.distances.mean())
+        var = float(((x - x.mean(0)) ** 2).sum(-1).mean())
+        assert inertia < 0.9 * var   # clusters explain structure
+
+    def test_token_dataset_shapes(self):
+        ds = SyntheticTokenDataset(100, seq_len=32, vocab_size=64)
+        assert ds.x.shape == (100, 32) and ds.x.max() < 64
+
+    def test_batch_iterator_epochs(self):
+        ds = SyntheticImageDataset(55, image_size=8, seed=0)
+        it = BatchIterator(ds, 10, seed=0)
+        seen = [next(it) for _ in range(7)]     # crosses an epoch boundary
+        assert all(b[0].shape == (10, 8, 8, 3) for b in seen)
+        assert it.epoch >= 1
+
+    def test_small_client_upsampled(self):
+        ds = SyntheticImageDataset(5, image_size=8, seed=0)
+        it = BatchIterator(ds, 16, seed=0)
+        x, y = next(it)
+        assert x.shape[0] == 16
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(20, 200), nc=st.integers(2, 10), k=st.integers(1, 4),
+       seed=st.integers(0, 99))
+def test_property_partition_class_budget(n, nc, k, seed):
+    k = min(k, 10)
+    ds = SyntheticImageDataset(n, image_size=8, num_classes=10, seed=seed)
+    clients = partition_k_shards(ds, nc, k_classes=k, seed=seed)
+    for c in clients:
+        assert len(np.unique(c.data.y)) <= k
