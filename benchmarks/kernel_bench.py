@@ -15,8 +15,7 @@ from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))       # warmup + compile exactly once
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

@@ -1,8 +1,10 @@
 """Benchmark runner: one entry per paper table + communication accounting +
-kernel micro-benchmarks. Prints ``name,value,extra`` CSV rows and a paper-
-claim validation summary; writes experiments/bench_results.json.
+kernel micro-benchmarks + the selection-pipeline suite. Prints
+``name,value,extra`` CSV rows and a paper-claim validation summary; writes
+experiments/bench_results.json and BENCH_selection.json (the §3.1 hot-path
+trajectory tracked PR over PR).
 
-  PYTHONPATH=src python -m benchmarks.run [--only tables|kernels|comm]
+  PYTHONPATH=src python -m benchmarks.run [--only tables|kernels|comm|selection]
 """
 from __future__ import annotations
 
@@ -97,6 +99,16 @@ def run_comm(results):
     results["comm"] = rows
 
 
+def run_selection(results):
+    """§3.1 selection pipeline at paper scale -> BENCH_selection.json."""
+    from benchmarks import selection_bench as S
+    print("# selection pipeline (2500 maps, 10x10 clusters; seed vs fused)")
+    rows, report = S.run()
+    _emit(rows)
+    results["selection"] = report
+    return report
+
+
 def run_kernels(results):
     from benchmarks import kernel_bench as K
     print("# kernel micro-benchmarks (jnp oracle on CPU + v5e roofline est.)")
@@ -112,11 +124,13 @@ def run_kernels(results):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=[None, "tables", "kernels", "comm"])
+                    choices=[None, "tables", "kernels", "comm", "selection"])
     args = ap.parse_args(argv)
 
     results = {}
     t0 = time.time()
+    if args.only in (None, "selection"):
+        run_selection(results)
     if args.only in (None, "comm"):
         run_comm(results)
     if args.only in (None, "kernels"):

@@ -216,6 +216,10 @@ class FLConfig:
     reset_upper_each_round: bool = True  # paper: always trains from W_G^u(0)
     split_fraction: float = 0.34       # WRN-40-1 group 1 of 3
     use_selection: bool = True         # False = Table 2 baseline (all maps)
+    # --- selection engine knobs (beyond-paper perf; defaults = seed math) ---
+    batched_selection: bool = True     # vmap Extract&Selection across cohort
+    pca_solver: str = "exact"          # "randomized" = range-finder fast path
+    use_pallas_selection: bool = False # fused Pallas Lloyd kernel (TPU)
 
 
 @dataclass(frozen=True)

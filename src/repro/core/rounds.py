@@ -1,6 +1,9 @@
 """Algorithm 1 (paper): one global round of Split Training with Metadata
-Selection, at simulator granularity (explicit per-client loop; the pod-scale
-stacked/sharded variant lives in ``repro.core.distributed``).
+Selection, at simulator granularity (the pod-scale stacked/sharded variant
+lives in ``repro.core.distributed``). LocalUpdate still loops clients in
+Python, but Extract&Selection — the hot path — is batched: when the cohort's
+data shapes agree, ``select_for_clients`` stacks the clients and runs the
+lower forward plus the whole §3.1 pipeline under one ``vmap``.
 
     for each client k:
         M_Ck loads W_G(t-1)
@@ -25,13 +28,20 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core import fedavg as fa
 from repro.core import meta_training as mt
-from repro.core.selection import Selection, select_metadata
+from repro.core.selection import (Selection, select_metadata,
+                                  select_metadata_batched)
 from repro.core.split import SplitModel
 from repro.data.partition import ClientData
 from repro.fl.comms import CommLedger
 from repro.optim import sgd
 
 PyTree = Any
+
+# Batched selection stacks the whole cohort's data + activations on one
+# device; past this many stacked input elements (~1 GiB f32) fall back to
+# the sequential per-client path instead of risking an OOM the seed's
+# per-client loop never had. (Chunked streaming is a ROADMAP item.)
+MAX_BATCHED_ELEMENTS = 1 << 28
 
 
 @dataclass
@@ -45,22 +55,72 @@ class RoundResult:
     meta_losses: Optional[np.ndarray] = None
 
 
+def select_for_clients(model: SplitModel, params: PyTree,
+                       clients: List[ClientData], cfg: FLConfig,
+                       keys: jax.Array, num_classes: int):
+    """Batched Extract&Selection: stack the cohort, vmap the lower forward
+    and the whole §3.1 pipeline across clients in one call — replacing the
+    per-client Python loop's selections. ``keys`` are the per-client round
+    keys; each client's selection key matches what ``client_round`` would
+    derive on its own, so batched and sequential rounds are identical.
+
+    Returns a list of (x_k, y_k, acts_k, Selection_k) per client (the
+    device-resident arrays are threaded through so ``client_round`` does
+    not re-transfer them), or None when the cohort is ragged (different
+    data shapes) or its stacked inputs + activations exceed
+    MAX_BATCHED_ELEMENTS — callers then fall back to the sequential
+    path."""
+    if not cfg.use_selection or not cfg.batched_selection:
+        return None
+    if len({(c.data.x.shape, c.data.y.shape) for c in clients}) != 1:
+        return None
+    x_shape = clients[0].data.x.shape
+    act_shape = jax.eval_shape(
+        lambda x: model.apply_lower(params, x),
+        jax.ShapeDtypeStruct(x_shape, jnp.float32)).shape
+    stacked = len(clients) * (int(np.prod(x_shape))
+                              + int(np.prod(act_shape)))
+    if stacked > MAX_BATCHED_ELEMENTS:
+        return None
+    xs = jnp.stack([jnp.asarray(c.data.x) for c in clients])
+    ys = jnp.stack([jnp.asarray(c.data.y) for c in clients])
+    sel_keys = jax.vmap(lambda k: jax.random.split(k)[0])(jnp.asarray(keys))
+    acts = jax.vmap(lambda x: model.apply_lower(params, x))(xs)
+    sels = select_metadata_batched(
+        acts, ys, sel_keys, num_classes=num_classes,
+        clusters_per_class=cfg.clusters_per_class,
+        pca_components=cfg.pca_components, kmeans_iters=cfg.kmeans_iters,
+        use_pallas=cfg.use_pallas_selection, pca_solver=cfg.pca_solver)
+    return [(xs[i], ys[i], acts[i],
+             Selection(sels.indices[i], sels.valid[i], sels.features[i]))
+            for i in range(len(clients))]
+
+
 def client_round(model: SplitModel, params: PyTree, client: ClientData,
                  cfg: FLConfig, key: jax.Array, ledger: CommLedger,
-                 num_classes: int):
-    """Client k's work: Extract&Selection + LocalUpdate."""
-    x, y = jnp.asarray(client.data.x), jnp.asarray(client.data.y)
+                 num_classes: int, precomputed=None):
+    """Client k's work: Extract&Selection + LocalUpdate. ``precomputed`` is
+    an optional (x, y, acts, Selection) tuple from ``select_for_clients``
+    (already on device)."""
+    if precomputed is not None:
+        x, y, acts, sel = precomputed
+    else:
+        x, y = jnp.asarray(client.data.x), jnp.asarray(client.data.y)
+        acts = sel = None
     k_sel, k_loc = jax.random.split(key)
 
     # ---- Extract & Selection (uses ONLY the lower part W_G^l(t-1)) ----
     metadata = None
     if cfg.use_selection:
-        acts = model.apply_lower(params, x)                       # A_k^[j]
-        sel: Selection = select_metadata(
-            acts, y, k_sel, num_classes=num_classes,
-            clusters_per_class=cfg.clusters_per_class,
-            pca_components=cfg.pca_components,
-            kmeans_iters=cfg.kmeans_iters)
+        if sel is None:
+            acts = model.apply_lower(params, x)                   # A_k^[j]
+            sel = select_metadata(
+                acts, y, k_sel, num_classes=num_classes,
+                clusters_per_class=cfg.clusters_per_class,
+                pca_components=cfg.pca_components,
+                kmeans_iters=cfg.kmeans_iters,
+                use_pallas=cfg.use_pallas_selection,
+                pca_solver=cfg.pca_solver)
         sel_acts = jnp.take(acts, sel.indices, axis=0)
         sel_y = jnp.take(y, sel.indices, axis=0)
         metadata = (sel_acts, sel_y, sel.valid)
@@ -115,10 +175,13 @@ def run_round(model: SplitModel, global_params: PyTree, upper_init: PyTree,
               num_classes: int = 10) -> RoundResult:
     ledger = ledger if ledger is not None else CommLedger()
     keys = jax.random.split(key, len(clients) + 1)
+    pre = select_for_clients(model, global_params, clients, cfg,
+                             keys[:-1], num_classes)
     client_params, metadatas, losses = [], [], []
-    for c, k in zip(clients, keys[:-1]):
+    for i, (c, k) in enumerate(zip(clients, keys[:-1])):
         p, m, l = client_round(model, global_params, c, cfg, k, ledger,
-                               num_classes)
+                               num_classes,
+                               precomputed=None if pre is None else pre[i])
         client_params.append(p)
         metadatas.append(m)
         losses.append(l)

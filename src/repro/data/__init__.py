@@ -1,9 +1,11 @@
-from repro.data.datasets import (SyntheticImageDataset, SyntheticTokenDataset,
+from repro.data.datasets import (SyntheticActivationMaps,
+                                 SyntheticImageDataset, SyntheticTokenDataset,
                                  Dataset)
 from repro.data.partition import (partition_k_shards, partition_dirichlet,
                                   ClientData)
 from repro.data.pipeline import BatchIterator, batched_epoch
 
-__all__ = ["Dataset", "SyntheticImageDataset", "SyntheticTokenDataset",
-           "partition_k_shards", "partition_dirichlet", "ClientData",
-           "BatchIterator", "batched_epoch"]
+__all__ = ["Dataset", "SyntheticActivationMaps", "SyntheticImageDataset",
+           "SyntheticTokenDataset", "partition_k_shards",
+           "partition_dirichlet", "ClientData", "BatchIterator",
+           "batched_epoch"]

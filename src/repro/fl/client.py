@@ -33,6 +33,7 @@ class FLClient:
         return (train + select) / (self.compute_speed * 1e9)
 
     def run(self, model: SplitModel, params: Any, cfg: FLConfig,
-            key: jax.Array, ledger: CommLedger, num_classes: int):
+            key: jax.Array, ledger: CommLedger, num_classes: int,
+            precomputed=None):
         return client_round(model, params, self.client, cfg, key, ledger,
-                            num_classes)
+                            num_classes, precomputed=precomputed)

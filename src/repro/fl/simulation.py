@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.compose import evaluate
+from repro.core.rounds import select_for_clients
 from repro.core.split import SplitModel
 from repro.data.datasets import Dataset
 from repro.data.partition import ClientData
@@ -62,14 +63,27 @@ class FLSimulation:
         for t in range(rounds):
             self.key, k_round, k_sample = jax.random.split(self.key, 3)
             idx = self.server.sample_clients(len(self.clients), k_sample)
+            # per-client keys keep the seed's streams (split count changes
+            # every key, so the count must stay len(idx)); the aggregate
+            # key is derived separately — it used to alias the last
+            # client's key
             keys = jax.random.split(k_round, len(idx))
+            k_server = jax.random.fold_in(k_round, len(idx))
+            cohort = [self.clients[int(i)] for i in idx]
+            # Extract&Selection for the whole cohort in one vmapped call
+            # (falls back to the per-client path on ragged data shapes)
+            pre = select_for_clients(
+                self.model, self.server.global_params,
+                [c.client for c in cohort], self.cfg, keys,
+                self.num_classes)
             cparams, metas, losses = [], [], []
-            for i, k in zip(idx, keys):
-                p, m, l = self.clients[int(i)].run(
+            for j, (c, k) in enumerate(zip(cohort, keys)):
+                p, m, l = c.run(
                     self.model, self.server.global_params, self.cfg, k,
-                    self.server.ledger, self.num_classes)
+                    self.server.ledger, self.num_classes,
+                    precomputed=None if pre is None else pre[j])
                 cparams.append(p); metas.append(m); losses.append(l)
-            rr = self.server.aggregate(cparams, metas, keys[-1])
+            rr = self.server.aggregate(cparams, metas, k_server)
             res.client_loss.append(float(np.mean(losses)))
             res.metadata_counts.append(rr.metadata_count)
             if (t + 1) % eval_every == 0 or t == rounds - 1:

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
-from repro.kernels.kmeans import kmeans_pairwise_dist_kernel
+from repro.kernels.kmeans import kmeans_lloyd_kernel, kmeans_pairwise_dist_kernel
 
 
 def _interpret() -> bool:
@@ -39,6 +39,30 @@ def kmeans_pairwise_dist(x: jnp.ndarray, c: jnp.ndarray,
     out = kmeans_pairwise_dist_kernel(xp, cp, block_n=block_n,
                                       interpret=_interpret())
     return out[:n, :k]
+
+
+def kmeans_lloyd_step(x: jnp.ndarray, c: jnp.ndarray, lmask: jnp.ndarray,
+                      block_n: int = 256):
+    """Fused Lloyd step: (N,D),(K,D),(N,K) -> (assign (N,) i32,
+    mindist (N,), sums (K,D), counts (K,)). Pads N to block_n and D/K to
+    lane width 128. Padding is correctness-free by construction: padded
+    rows get an all-BIG mask row (zero weight, never accumulated), padded
+    cluster columns get BIG for every row (never win the argmin), and
+    zero-padded D contributes 0 to every distance."""
+    n, d = x.shape
+    k = c.shape[0]
+    if n < 64:   # tiny problems: the jnp path is faster than kernel overhead
+        return ref.kmeans_lloyd_ref(x, c, lmask)
+    npad = _pad_to(n, block_n)
+    dpad = _pad_to(d, 128)
+    kpad = _pad_to(k, 128)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, npad - n), (0, dpad - d)))
+    cp = jnp.pad(c.astype(jnp.float32), ((0, kpad - k), (0, dpad - d)))
+    lp = jnp.pad(lmask.astype(jnp.float32), ((0, npad - n), (0, kpad - k)),
+                 constant_values=ref.BIG)
+    assign, mind, sums, counts = kmeans_lloyd_kernel(
+        xp, cp, lp, block_n=block_n, interpret=_interpret())
+    return assign[:n], mind[:n], sums[:k, :d], counts[0, :k]
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

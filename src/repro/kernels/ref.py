@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 
 NEG = -1e30
+BIG = 1e30
 
 
 def kmeans_pairwise_dist_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
@@ -14,6 +15,26 @@ def kmeans_pairwise_dist_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     x2 = jnp.sum(x * x, -1, keepdims=True)
     c2 = jnp.sum(c * c, -1)
     return x2 + c2[None, :] - 2.0 * (x @ c.T)
+
+
+def kmeans_lloyd_ref(x: jnp.ndarray, c: jnp.ndarray, lmask: jnp.ndarray):
+    """Oracle for the fused Lloyd step (kernels/kmeans.py).
+
+    x: (N, D), c: (K, D), lmask: (N, K) additive mask — 0 where the row may
+    join the cluster, BIG where forbidden. A row with no admissible cluster
+    gets zero weight in the statistics. Returns
+    (assign (N,) i32, mindist (N,) f32, sums (K, D) f32, counts (K,) f32).
+    """
+    k = c.shape[0]
+    d = kmeans_pairwise_dist_ref(x, c) + lmask
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+    mind = jnp.min(d, axis=1)
+    w = (jnp.min(lmask, axis=1) <= 0.0).astype(x.dtype)
+    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype) * w[:, None]
+    counts = onehot.sum(0)                                 # (K,)
+    sums = jax.lax.dot_general(onehot, x, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    return assign, mind, sums, counts
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):

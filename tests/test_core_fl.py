@@ -146,6 +146,31 @@ class TestAlgorithm1:
         assert res.metadata_count / res.total_samples < 0.2
         assert np.isfinite(res.client_losses).all()
 
+    def test_batched_selection_round_equals_sequential(self, wrn):
+        """The vmap-over-stacked-clients selection path must reproduce the
+        sequential per-client loop bit-for-bit (same keys, same metadata,
+        same composed model)."""
+        import dataclasses
+        cfg, model, params = wrn
+        ds = SyntheticImageDataset(300, image_size=cfg.image_size, seed=0)
+        clients = partition_k_shards(ds, 3, k_classes=2,
+                                     samples_per_client=40)
+        flcfg = FLConfig(num_clients=3, clients_per_round=3,
+                         local_batch_size=20, pca_components=8,
+                         clusters_per_class=3, kmeans_iters=4,
+                         meta_epochs=1, meta_batch_size=10,
+                         batched_selection=True)
+        _, upper0 = model.split(params)
+        r1 = run_round(model, params, upper0, clients, flcfg, KEY)
+        r2 = run_round(model, params, upper0, clients,
+                       dataclasses.replace(flcfg, batched_selection=False),
+                       KEY)
+        assert r1.metadata_count == r2.metadata_count
+        assert r1.client_losses == r2.client_losses
+        for a, b in zip(jax.tree.leaves(r1.composed_params),
+                        jax.tree.leaves(r2.composed_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
     def test_without_selection_uploads_everything(self, wrn):
         cfg, model, params = wrn
         from repro.fl.comms import CommLedger

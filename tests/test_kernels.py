@@ -42,6 +42,101 @@ def test_kmeans_dist_property(n, d, k, seed):
     assert (got > -1e-3).all()            # squared distances non-negative
 
 
+# ---------------------------------------------------------------- fused lloyd
+def _lmask(n, k, seed, num_classes=0, masked_rows=0, empty_clusters=0):
+    """Additive mask: optional per-class structure, fully-masked rows,
+    and clusters no row may join."""
+    r = np.random.default_rng(seed)
+    if num_classes > 0:
+        labels = r.integers(0, num_classes, n)
+        slot_class = np.arange(k) % num_classes
+        lm = np.where(labels[:, None] == slot_class[None, :], 0.0, 1e30)
+    else:
+        lm = np.zeros((n, k))
+    if masked_rows:
+        lm[r.choice(n, masked_rows, replace=False)] = 1e30
+    if empty_clusters:
+        lm[:, r.choice(k, empty_clusters, replace=False)] = 1e30
+    return jnp.asarray(lm, jnp.float32)
+
+
+def _ref_lloyd_via_pairwise(x, c, lm):
+    """The contract path: kmeans_pairwise_dist_ref + jnp argmin/accumulate."""
+    d = ref.kmeans_pairwise_dist_ref(x, c) + lm
+    assign = jnp.argmin(d, axis=1).astype(jnp.int32)
+    mind = jnp.min(d, axis=1)
+    w = (jnp.min(lm, axis=1) <= 0.0).astype(x.dtype)
+    onehot = jax.nn.one_hot(assign, c.shape[0], dtype=x.dtype) * w[:, None]
+    return assign, mind, onehot.sum(0), onehot.T @ x
+
+
+@pytest.mark.parametrize("n,d,k,num_classes,masked_rows,empty_clusters", [
+    (256, 128, 32, 0, 0, 0),      # aligned, unmasked
+    (256, 128, 16, 4, 10, 2),     # aligned, class mask + dead rows/clusters
+    (300, 37, 7, 3, 5, 1),        # non-aligned N/D/K
+    (100, 200, 10, 0, 100, 0),    # every row masked
+    (512, 64, 100, 10, 0, 0),     # select_metadata's 10x10 slot layout
+])
+def test_kmeans_lloyd_fused_matches_ref(n, d, k, num_classes, masked_rows,
+                                        empty_clusters):
+    """The fused kernel must reproduce the pairwise-dist + argmin/accumulate
+    path: integer outputs bit-for-bit always; float outputs bit-for-bit when
+    D is lane-aligned (identical gemm shapes), else within a few ulp (the
+    zero-padded gemm reduces in a different order)."""
+    x = _rand(KEY, (n, d), jnp.float32)
+    c = _rand(jax.random.PRNGKey(1), (k, d), jnp.float32)
+    lm = _lmask(n, k, seed=2, num_classes=num_classes,
+                masked_rows=masked_rows, empty_clusters=empty_clusters)
+    assign, mind, sums, counts = ops.kmeans_lloyd_step(x, c, lm)
+    rassign, rmind, rcounts, rsums = _ref_lloyd_via_pairwise(x, c, lm)
+    np.testing.assert_array_equal(np.asarray(assign), np.asarray(rassign))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rcounts))
+    if d % 128 == 0:
+        np.testing.assert_array_equal(np.asarray(mind), np.asarray(rmind))
+        np.testing.assert_array_equal(np.asarray(sums), np.asarray(rsums))
+    else:
+        np.testing.assert_allclose(np.asarray(mind), np.asarray(rmind),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums),
+                                   rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(64, 300), d=st.integers(1, 96), k=st.integers(1, 24),
+       seed=st.integers(0, 999))
+def test_kmeans_lloyd_fused_property(n, d, k, seed):
+    """For any shape/mask: assignments and counts bit-for-bit, statistics
+    within gemm-order tolerance, counts account for every unmasked row."""
+    kk = jax.random.PRNGKey(seed)
+    x = _rand(kk, (n, d), jnp.float32)
+    c = _rand(jax.random.fold_in(kk, 1), (k, d), jnp.float32)
+    lm = _lmask(n, k, seed, num_classes=seed % 4,
+                masked_rows=seed % 7, empty_clusters=seed % min(k, 3))
+    assign, mind, sums, counts = ops.kmeans_lloyd_step(x, c, lm)
+    rassign, rmind, rcounts, rsums = _ref_lloyd_via_pairwise(x, c, lm)
+    np.testing.assert_array_equal(np.asarray(assign), np.asarray(rassign))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rcounts))
+    np.testing.assert_allclose(np.asarray(mind), np.asarray(rmind),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums),
+                               rtol=1e-5, atol=1e-4)
+    n_admissible = int((np.asarray(lm).min(1) <= 0).sum())
+    assert int(np.asarray(counts).sum()) == n_admissible
+
+
+def test_kmeans_lloyd_fused_vmap_clients():
+    """Batched (vmapped-over-clients) fused step == per-client loop."""
+    b, n, d, k = 3, 128, 32, 8
+    x = _rand(KEY, (b, n, d), jnp.float32)
+    c = _rand(jax.random.PRNGKey(1), (b, k, d), jnp.float32)
+    lm = jnp.stack([_lmask(n, k, seed=s, num_classes=2) for s in range(b)])
+    batched = jax.vmap(ops.kmeans_lloyd_step)(x, c, lm)
+    for i in range(b):
+        single = ops.kmeans_lloyd_step(x[i], c[i], lm[i])
+        for bt, st_ in zip(batched, single):
+            np.testing.assert_array_equal(np.asarray(bt[i]), np.asarray(st_))
+
+
 # ---------------------------------------------------------------- flash attn
 @pytest.mark.parametrize("b,s,h,kv,d,causal,window,dtype", [
     (2, 256, 8, 4, 64, True, 0, jnp.float32),

@@ -7,9 +7,23 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.selection import (kmeans, pca_fit, pca_transform,
                                   representatives, select_metadata,
+                                  select_metadata_batched,
+                                  select_metadata_reference,
                                   selected_fraction)
 
 KEY = jax.random.PRNGKey(0)
+
+
+def structured_acts(seed, n=400):
+    """Low-rank mode-structured activation maps (decaying spectrum) — the
+    regime real split-layer activations live in; same generator the
+    selection benchmark validates against."""
+    from repro.data import SyntheticActivationMaps
+    ds = SyntheticActivationMaps(n, (8, 8, 4), num_classes=4,
+                                 modes_per_class=3, rank=48,
+                                 spectrum_decay=0.9, seed=seed,
+                                 structure_seed=seed)
+    return jnp.asarray(ds.x), jnp.asarray(ds.y)
 
 
 class TestPCA:
@@ -137,6 +151,110 @@ class TestSelectMetadata:
                             kmeans_iters=15)
         sel_modes = set(which[np.asarray(s.indices)])
         assert len(sel_modes) == 4   # one representative per true mode
+
+
+class TestFusedEngineIdentity:
+    """The fused single-pass engine must reproduce the seed implementation
+    (``select_metadata_reference``) selection-for-selection."""
+
+    def test_single_pass_equals_seed_reference(self):
+        for seed in range(3):
+            rng_ = np.random.default_rng(seed)
+            acts = jnp.asarray(rng_.normal(size=(300, 6, 6, 4)), jnp.float32)
+            labels = jnp.asarray(rng_.integers(0, 6, 300))
+            key = jax.random.PRNGKey(seed)
+            kw = dict(num_classes=6, clusters_per_class=5,
+                      pca_components=24, kmeans_iters=10)
+            a = select_metadata(acts, labels, key, **kw)
+            b = select_metadata_reference(acts, labels, key, **kw)
+            np.testing.assert_array_equal(np.asarray(a.indices),
+                                          np.asarray(b.indices))
+            np.testing.assert_array_equal(np.asarray(a.valid),
+                                          np.asarray(b.valid))
+
+    def test_unlabeled_mode_equals_seed_reference(self):
+        acts = jnp.asarray(np.random.default_rng(1).normal(size=(150, 40)),
+                           jnp.float32)
+        kw = dict(per_class=False, clusters_per_class=8, pca_components=16,
+                  kmeans_iters=8)
+        a = select_metadata(acts, None, KEY, **kw)
+        b = select_metadata_reference(acts, None, KEY, **kw)
+        np.testing.assert_array_equal(np.asarray(a.indices),
+                                      np.asarray(b.indices))
+
+    def test_pallas_path_matches_jnp_path(self):
+        """use_pallas=True routes init, Lloyd and representatives through
+        the fused kernel (interpret mode on CPU) — same selections."""
+        acts, labels = structured_acts(0, n=300)
+        kw = dict(num_classes=4, clusters_per_class=5, pca_components=16,
+                  kmeans_iters=6)
+        a = select_metadata(acts, labels, KEY, **kw)
+        b = select_metadata(acts, labels, KEY, use_pallas=True, **kw)
+        np.testing.assert_array_equal(np.asarray(a.indices),
+                                      np.asarray(b.indices))
+        np.testing.assert_array_equal(np.asarray(a.valid),
+                                      np.asarray(b.valid))
+
+    def test_randomized_pca_matches_on_structured_maps(self):
+        """On decaying-spectrum maps the range-finder PCA spans the same
+        subspace, and selections are rotation-invariant within it."""
+        for seed in range(3):
+            acts, labels = structured_acts(seed)
+            key = jax.random.PRNGKey(seed)
+            kw = dict(num_classes=4, clusters_per_class=5,
+                      pca_components=16, kmeans_iters=10)
+            a = select_metadata(acts, labels, key, pca_solver="randomized",
+                                **kw)
+            b = select_metadata_reference(acts, labels, key, **kw)
+            np.testing.assert_array_equal(np.asarray(a.indices),
+                                          np.asarray(b.indices))
+
+    def test_batched_vmap_equals_sequential_loop(self):
+        """select_metadata_batched over stacked clients == looping clients
+        through select_metadata one at a time."""
+        B = 4
+        cohort = [structured_acts(s) for s in range(B)]
+        acts = jnp.stack([a for a, _ in cohort])
+        labels = jnp.stack([l for _, l in cohort])
+        keys = jax.random.split(KEY, B)
+        kw = dict(num_classes=4, clusters_per_class=5, pca_components=16,
+                  kmeans_iters=8)
+        batched = select_metadata_batched(acts, labels, keys, **kw)
+        for i in range(B):
+            one = select_metadata(acts[i], labels[i], keys[i], **kw)
+            np.testing.assert_array_equal(np.asarray(batched.indices[i]),
+                                          np.asarray(one.indices))
+            np.testing.assert_array_equal(np.asarray(batched.valid[i]),
+                                          np.asarray(one.valid))
+
+    def test_early_exit_matches_full_sweep_budget(self):
+        """Lloyd early exit is bit-identical to running the full budget:
+        more iterations past convergence change nothing."""
+        acts, labels = structured_acts(7)
+        kw = dict(num_classes=4, clusters_per_class=3, pca_components=8)
+        a = select_metadata(acts, labels, KEY, kmeans_iters=25, **kw)
+        b = select_metadata(acts, labels, KEY, kmeans_iters=100, **kw)
+        np.testing.assert_array_equal(np.asarray(a.indices),
+                                      np.asarray(b.indices))
+
+
+class TestRandomizedPCA:
+    def test_subspace_matches_exact_on_decaying_spectrum(self):
+        acts, _ = structured_acts(0, n=300)
+        flat = acts.reshape(300, -1)
+        ex = pca_fit(flat, 16)
+        rd = pca_fit(flat, 16, solver="randomized")
+        p1 = np.asarray(ex.components.T @ ex.components)
+        p2 = np.asarray(rd.components.T @ rd.components)
+        assert np.abs(p1 - p2).max() < 1e-2
+        np.testing.assert_allclose(np.asarray(rd.explained),
+                                   np.asarray(ex.explained), rtol=1e-2)
+
+    def test_components_orthonormal(self):
+        acts, _ = structured_acts(1, n=200)
+        rd = pca_fit(acts.reshape(200, -1), 12, solver="randomized")
+        g = np.asarray(rd.components @ rd.components.T)
+        np.testing.assert_allclose(g, np.eye(12), atol=1e-3)
 
 
 @settings(max_examples=25, deadline=None)
