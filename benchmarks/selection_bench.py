@@ -13,6 +13,21 @@ Compares, on identical data and keys:
                   same selections on realistically low-rank maps, no D^3 eigh
   batched(B)      ``select_metadata_batched`` over a stacked cohort,
                   reported per client (the fleet-throughput number)
+  chunked(B,c)    the batched cohort STREAMED in client chunks of c
+                  (``repro.core.distributed``'s mega-cohort schedule: same
+                  selections, one chunk's memory ceiling). Its comparator
+                  is the SEQUENTIAL FALLBACK it replaces — past
+                  MAX_BATCHED_ELEMENTS the old engine looped clients
+                  one at a time — not the one-stack path that cannot run
+                  there at all.
+  sharded(B)      ``select_metadata_sharded`` over a smoke mesh of host
+                  devices (subprocess, XLA_FLAGS device count) — the
+                  shard_map pod path, selections identical to batched.
+                  Smoke-mesh 'devices' are threads on this container's
+                  2 cores, so the measured wall cannot show device
+                  parallelism; the entry also reports the measured
+                  per-isolated-device cost (1-device mesh) and its /N
+                  pod projection.
 
 Activation maps are mode-structured and low-rank (per-class cluster modes on
 a decaying spectrum) — the regime the paper's PCA step presumes; white noise
@@ -22,6 +37,9 @@ perf trajectory of this path is tracked from this PR on.
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -41,6 +59,8 @@ PEAK_FLOPS_F32 = PEAK_FLOPS_BF16 / 2
 N, SHAPE, NUM_CLASSES, CLUSTERS = 2500, (16, 16, 4), 10, 10
 PCA_P, KMEANS_ITERS, BATCH = 64, 25, 8
 SKETCH = PCA_P + 32                      # randomized-PCA sketch width
+CHUNK = 4                                # streaming chunk (clients) to bench
+SMOKE_DEVICES = 8                        # host devices for the sharded row
 
 
 def structured_activations(seed: int):
@@ -85,6 +105,80 @@ def _roofline():
     }
 
 
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _cohort(key):
+    cohort = [structured_activations(seed=i) for i in range(BATCH)]
+    bacts = jnp.stack([a for a, _ in cohort])
+    blabels = jnp.stack([l for _, l in cohort])
+    bkeys = jax.random.split(key, BATCH)
+    return bacts, blabels, bkeys
+
+
+def _chunked(bacts, blabels, bkeys, kw):
+    """The mega-cohort streaming schedule of distributed.select_cohort at
+    the acts level: chunk the client axis, concatenate the selections."""
+    from repro.core.selection import Selection
+    parts = [select_metadata_batched(bacts[i:i + CHUNK],
+                                     blabels[i:i + CHUNK],
+                                     bkeys[i:i + CHUNK],
+                                     pca_solver="randomized", **kw)
+             for i in range(0, BATCH, CHUNK)]
+    return Selection(*(jnp.concatenate(fs) for fs in zip(*parts)))
+
+
+def _indices_md5(sel) -> str:
+    import hashlib
+    return hashlib.md5(np.asarray(sel.indices).tobytes()).hexdigest()
+
+
+def _sharded_worker():
+    """Subprocess entry (own jax init under forced host device count):
+    times ``select_metadata_sharded`` on the same cohort/keys, plus the
+    one-device-mesh serial cost (the isolated-per-device number the /N pod
+    projection uses) and the one-stack batched path in the same env for a
+    like-for-like baseline. Reports the selections' hash for the parent's
+    identity check."""
+    from repro.core.distributed import (select_metadata_sharded,
+                                        selection_mesh)
+    key = jax.random.PRNGKey(0)
+    kw = dict(num_classes=NUM_CLASSES, clusters_per_class=CLUSTERS,
+              pca_components=PCA_P, kmeans_iters=KMEANS_ITERS)
+    bacts, blabels, bkeys = _cohort(key)
+    mesh = selection_mesh()
+    t, s = _time(lambda: select_metadata_sharded(
+        bacts, blabels, bkeys, mesh, pca_solver="randomized", **kw), iters=3)
+    mesh1 = selection_mesh(1)
+    t1, s1 = _time(lambda: select_metadata_sharded(
+        bacts, blabels, bkeys, mesh1, pca_solver="randomized", **kw),
+        iters=3)
+    tb, sb = _time(lambda: select_metadata_batched(
+        bacts, blabels, bkeys, pca_solver="randomized", **kw), iters=3)
+    print(json.dumps({"wall_s": t, "devices": len(jax.devices()),
+                      "one_device_wall_s": t1,
+                      "batched_on_mesh_wall_s": tb,
+                      "indices_md5": _indices_md5(s),
+                      "one_device_md5": _indices_md5(s1),
+                      "batched_md5": _indices_md5(sb)}))
+
+
+def _measure_sharded():
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count="
+                         f"{SMOKE_DEVICES}")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(REPO, "src"), REPO,
+                    env.get("PYTHONPATH", "")) if p)
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.selection_bench",
+         "--sharded-worker"],
+        env=env, capture_output=True, text=True, timeout=1200, cwd=REPO)
+    if r.returncode != 0:
+        return {"error": r.stderr[-500:]}
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
 def run(out_path: str = "BENCH_selection.json"):
     acts, labels = structured_activations(seed=0)
     key = jax.random.PRNGKey(0)
@@ -99,14 +193,14 @@ def run(out_path: str = "BENCH_selection.json"):
         lambda: select_metadata(acts, labels, key,
                                 pca_solver="randomized", **kw))
 
-    cohort = [structured_activations(seed=i) for i in range(BATCH)]
-    bacts = jnp.stack([a for a, _ in cohort])
-    blabels = jnp.stack([l for _, l in cohort])
-    bkeys = jax.random.split(key, BATCH)
-    t_batch, _ = _time(
+    bacts, blabels, bkeys = _cohort(key)
+    t_batch, s_batch = _time(
         lambda: select_metadata_batched(bacts, blabels, bkeys,
                                         pca_solver="randomized", **kw),
         iters=3)
+    t_chunk, s_chunk = _time(
+        lambda: _chunked(bacts, blabels, bkeys, kw), iters=3)
+    sharded = _measure_sharded()
 
     def match(s):
         return (bool(np.array_equal(np.asarray(s.indices),
@@ -141,6 +235,43 @@ def run(out_path: str = "BENCH_selection.json"):
             "batched_per_client": {"wall_s": t_batch / BATCH,
                                    "speedup_vs_seed":
                                        t_seed / (t_batch / BATCH)},
+            "chunked_per_client": {
+                "wall_s": t_chunk / BATCH,
+                "chunk_clients": CHUNK,
+                "speedup_vs_seed": t_seed / (t_chunk / BATCH),
+                # past MAX_BATCHED_ELEMENTS the old engine fell back to the
+                # per-client loop — that loop (one fused_fast client at a
+                # time) is what streaming replaces; both ratios jitter
+                # ~±20% run-to-run on this shared box (see module docstring)
+                "speedup_vs_sequential_fallback": t_fast / (t_chunk / BATCH),
+                "throughput_vs_one_stack": t_batch / t_chunk,
+                "selections_match_batched": _indices_md5(s_chunk)
+                                            == _indices_md5(s_batch)},
+            "sharded_per_client": (
+                {"error": sharded["error"]} if "error" in sharded else
+                {"wall_s": sharded["wall_s"] / BATCH,
+                 "devices": sharded["devices"],
+                 "batched_on_mesh_wall_s":
+                     sharded["batched_on_mesh_wall_s"] / BATCH,
+                 "one_device_wall_s_per_client":
+                     sharded["one_device_wall_s"] / BATCH,
+                 # the smoke mesh's 'devices' are threads sharing this
+                 # container's physical cores, so the measured wall cannot
+                 # exhibit device parallelism; isolated pod devices each
+                 # run the one-device cost, so per-client wall is /N
+                 "projected_pod_wall_s_per_client":
+                     sharded["one_device_wall_s"]
+                     / (BATCH * sharded["devices"]),
+                 "projected_pod_speedup_vs_batched":
+                     (t_batch / BATCH)
+                     / (sharded["one_device_wall_s"]
+                        / (BATCH * sharded["devices"])),
+                 "speedup_vs_seed":
+                     t_seed / (sharded["wall_s"] / BATCH),
+                 "selections_match_batched":
+                     sharded["indices_md5"] == _indices_md5(s_batch)
+                     and sharded["one_device_md5"]
+                     == _indices_md5(s_batch)}),
         },
         "roofline_v5e_fused_fast": _roofline(),
     }
@@ -155,8 +286,32 @@ def run(out_path: str = "BENCH_selection.json"):
          f"ms speedup={t_seed/t_fast:.2f}x match={match(s_fast)}"),
         ("selection_batched_per_client", t_batch / BATCH * 1e3,
          f"ms speedup={t_seed/(t_batch/BATCH):.2f}x"),
+        ("selection_chunked_per_client", t_chunk / BATCH * 1e3,
+         f"ms chunk={CHUNK} "
+         f"vs_seq_fallback={t_fast/(t_chunk/BATCH):.2f}x "
+         f"match={report['paths']['chunked_per_client']['selections_match_batched']}"),
         ("selection_roofline_v5e_us",
          report["roofline_v5e_fused_fast"]["v5e_roofline_us"],
          "analytic, fused_fast path"),
     ]
+    sp = report["paths"]["sharded_per_client"]
+    if "error" in sp:
+        rows.append(("selection_sharded_per_client", -1.0,
+                     f"ERROR {sp['error'][:80]}"))
+    else:
+        rows.append(
+            ("selection_sharded_per_client", sp["wall_s"] * 1e3,
+             f"ms devices={sp['devices']} "
+             f"pod_projection={sp['projected_pod_wall_s_per_client']*1e3:.0f}ms "
+             f"({sp['projected_pod_speedup_vs_batched']:.1f}x batched) "
+             f"match={sp['selections_match_batched']}"))
     return rows, report
+
+
+if __name__ == "__main__":
+    if "--sharded-worker" in sys.argv:
+        _sharded_worker()
+    else:
+        rows, _ = run()
+        for n, v, e in rows:
+            print(f"{n},{v:.4f},{e}")

@@ -73,7 +73,7 @@ def main():
         "test_acc": res.test_acc,
         "fedavg_acc": res.fedavg_acc,
         "metadata_counts": res.metadata_counts,
-        "selected_fraction": res.metadata_counts[-1] / res.comm["total_samples"],
+        "selected_fraction": res.selected_fraction,
         "comm": {k: v for k, v in res.comm.items()},
         "wall_time_s": time.time() - t0,
     }

@@ -220,6 +220,10 @@ class FLConfig:
     batched_selection: bool = True     # vmap Extract&Selection across cohort
     pca_solver: str = "exact"          # "randomized" = range-finder fast path
     use_pallas_selection: bool = False # fused Pallas Lloyd kernel (TPU)
+    # --- pod-scale engine (repro.core.distributed; results bit-identical) ---
+    distributed_selection: bool = False  # stacked cohort_round + shard_map
+    selection_chunk_size: int = 0      # >0: stream cohorts this many clients
+                                       # at a time (0 = auto by memory budget)
 
 
 @dataclass(frozen=True)

@@ -6,8 +6,12 @@ from repro.core.fedavg import (weight_average, weight_average_stacked,
 from repro.core.meta_training import meta_train
 from repro.core.compose import compose, evaluate
 from repro.core.rounds import run_round, RoundResult
+from repro.core.distributed import (cohort_round, run_round_distributed,
+                                    select_cohort, selection_mesh)
 
 __all__ = ["select_metadata", "kmeans", "pca_fit", "pca_transform",
            "representatives", "Selection", "SplitModel", "weight_average",
            "weight_average_stacked", "local_update", "broadcast_to_clients",
-           "meta_train", "compose", "evaluate", "run_round", "RoundResult"]
+           "meta_train", "compose", "evaluate", "run_round", "RoundResult",
+           "cohort_round", "run_round_distributed", "select_cohort",
+           "selection_mesh"]

@@ -1,9 +1,12 @@
 """Algorithm 1 (paper): one global round of Split Training with Metadata
-Selection, at simulator granularity (the pod-scale stacked/sharded variant
-lives in ``repro.core.distributed``). LocalUpdate still loops clients in
-Python, but Extract&Selection — the hot path — is batched: when the cohort's
-data shapes agree, ``select_for_clients`` stacks the clients and runs the
-lower forward plus the whole §3.1 pipeline under one ``vmap``.
+Selection, at simulator granularity. The pod-scale engine — ``shard_map``
+over the mesh's data axis, chunked mega-cohort streaming, and the stacked
+LocalUpdate — lives in ``repro.core.distributed``; this module
+delegates to it when ``cfg.distributed_selection`` is set (and for the
+chunked path whenever a cohort's stack would exceed the one-device memory
+budget). Extract&Selection — the hot path — is batched either way: when the
+cohort's data shapes agree, ``select_for_clients`` stacks the clients and
+runs the lower forward plus the whole §3.1 pipeline under one ``vmap``.
 
     for each client k:
         M_Ck loads W_G(t-1)
@@ -28,8 +31,7 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core import fedavg as fa
 from repro.core import meta_training as mt
-from repro.core.selection import (Selection, select_metadata,
-                                  select_metadata_batched)
+from repro.core.selection import Selection, select_metadata
 from repro.core.split import SplitModel
 from repro.data.partition import ClientData
 from repro.fl.comms import CommLedger
@@ -37,10 +39,11 @@ from repro.optim import sgd
 
 PyTree = Any
 
-# Batched selection stacks the whole cohort's data + activations on one
-# device; past this many stacked input elements (~1 GiB f32) fall back to
-# the sequential per-client path instead of risking an OOM the seed's
-# per-client loop never had. (Chunked streaming is a ROADMAP item.)
+# Batched selection stacks a chunk of the cohort's data + activations on one
+# device; past this many stacked input elements (~1 GiB f32) the cohort is
+# STREAMED through the pipeline in client chunks sized to fit the budget
+# (repro.core.distributed.select_cohort) — chunking is a pure schedule, so
+# results stay bit-identical to the one-stack (and sequential) path.
 MAX_BATCHED_ELEMENTS = 1 << 28
 
 
@@ -57,62 +60,92 @@ class RoundResult:
 
 def select_for_clients(model: SplitModel, params: PyTree,
                        clients: List[ClientData], cfg: FLConfig,
-                       keys: jax.Array, num_classes: int):
+                       keys: jax.Array, num_classes: int, mesh=None):
     """Batched Extract&Selection: stack the cohort, vmap the lower forward
     and the whole §3.1 pipeline across clients in one call — replacing the
     per-client Python loop's selections. ``keys`` are the per-client round
     keys; each client's selection key matches what ``client_round`` would
     derive on its own, so batched and sequential rounds are identical.
 
-    Returns a list of (x_k, y_k, acts_k, Selection_k) per client (the
-    device-resident arrays are threaded through so ``client_round`` does
-    not re-transfer them), or None when the cohort is ragged (different
-    data shapes) or its stacked inputs + activations exceed
-    MAX_BATCHED_ELEMENTS — callers then fall back to the sequential
-    path."""
+    A cohort whose stacked inputs + activations exceed MAX_BATCHED_ELEMENTS
+    (or with ``cfg.selection_chunk_size`` set) is streamed through the
+    pipeline in client chunks by ``distributed.select_cohort`` — identical
+    results, with each chunk's activations/features gathered down to the
+    selected metadata and dropped before the next chunk runs. ``mesh`` (a
+    mesh with a ``data`` axis) shards the client axis across devices with
+    ``shard_map``.
+
+    Returns a list of (x_k, y_k, (sel_acts_k, sel_y_k, valid_k)) per
+    client (device-resident, so ``client_round`` neither re-transfers nor
+    re-selects), or None when selection/batching is off or the cohort is
+    ragged (different data shapes) — callers then fall back to the
+    sequential path."""
+    from repro.core import distributed as D
     if not cfg.use_selection or not cfg.batched_selection:
         return None
-    if len({(c.data.x.shape, c.data.y.shape) for c in clients}) != 1:
+    if not D.cohort_is_stackable(clients):
+        return None
+    if not D.cohort_inputs_fit(clients):
         return None
     x_shape = clients[0].data.x.shape
-    act_shape = jax.eval_shape(
-        lambda x: model.apply_lower(params, x),
-        jax.ShapeDtypeStruct(x_shape, jnp.float32)).shape
-    stacked = len(clients) * (int(np.prod(x_shape))
-                              + int(np.prod(act_shape)))
-    if stacked > MAX_BATCHED_ELEMENTS:
-        return None
-    xs = jnp.stack([jnp.asarray(c.data.x) for c in clients])
-    ys = jnp.stack([jnp.asarray(c.data.y) for c in clients])
-    sel_keys = jax.vmap(lambda k: jax.random.split(k)[0])(jnp.asarray(keys))
-    acts = jax.vmap(lambda x: model.apply_lower(params, x))(xs)
-    sels = select_metadata_batched(
-        acts, ys, sel_keys, num_classes=num_classes,
-        clusters_per_class=cfg.clusters_per_class,
-        pca_components=cfg.pca_components, kmeans_iters=cfg.kmeans_iters,
-        use_pallas=cfg.use_pallas_selection, pca_solver=cfg.pca_solver)
-    return [(xs[i], ys[i], acts[i],
-             Selection(sels.indices[i], sels.valid[i], sels.features[i]))
+    x_dtype = jax.dtypes.canonicalize_dtype(
+        np.asarray(clients[0].data.x).dtype)
+    chunk = cfg.selection_chunk_size
+    if chunk <= 0:
+        chunk = D.auto_chunk_size(model, params, x_shape, x_dtype,
+                                  len(clients),
+                                  data_axis=D.data_axis_size(mesh))
+    xs, ys = D.cohort_arrays(clients)
+    sel_acts, sel_ys, valid = D.select_cohort(
+        model, params, xs, ys, keys, cfg, num_classes, chunk_size=chunk,
+        mesh=mesh, gather=True)
+    return [(xs[i], ys[i], (sel_acts[i], sel_ys[i], valid[i]))
             for i in range(len(clients))]
+
+
+def epoch_permutations(key: jax.Array, n: int, epochs: int) -> jnp.ndarray:
+    """(epochs, n) shuffle orders for LocalUpdate: epoch 0 keeps the seed's
+    stream (``permutation(key, n)``); every later epoch folds its index into
+    the key for a FRESH permutation. (The seed replayed epoch 0's order
+    every epoch via ``jnp.tile`` — multi-epoch SGD saw one fixed batch
+    order.)"""
+    ks = jax.vmap(lambda e: jax.random.fold_in(key, e))(jnp.arange(epochs))
+    ks = ks.at[0].set(key)
+    return jax.vmap(lambda k: jax.random.permutation(k, n))(ks)
+
+
+def local_batches(x: jnp.ndarray, y: jnp.ndarray, k_loc: jax.Array,
+                  cfg: FLConfig):
+    """Shuffle + batch one client's data for LocalUpdate: (steps, bs, ...)
+    with a fresh permutation each local epoch. Shared by the sequential
+    ``client_round`` and the stacked ``distributed.local_update_cohort`` so
+    both paths batch identically."""
+    n = x.shape[0]
+    bs = min(cfg.local_batch_size, n)
+    steps_per_epoch = max(n // bs, 1)
+    perm = epoch_permutations(k_loc, n, cfg.local_epochs)
+    perm = perm[:, :steps_per_epoch * bs].reshape(-1)
+    bx = x[perm].reshape((-1, bs) + x.shape[1:])
+    by = y[perm].reshape(-1, bs)
+    return bx, by
 
 
 def client_round(model: SplitModel, params: PyTree, client: ClientData,
                  cfg: FLConfig, key: jax.Array, ledger: CommLedger,
                  num_classes: int, precomputed=None):
     """Client k's work: Extract&Selection + LocalUpdate. ``precomputed`` is
-    an optional (x, y, acts, Selection) tuple from ``select_for_clients``
-    (already on device)."""
+    an optional (x, y, (sel_acts, sel_y, valid)) tuple from
+    ``select_for_clients`` (already on device)."""
     if precomputed is not None:
-        x, y, acts, sel = precomputed
+        x, y, metadata = precomputed
     else:
         x, y = jnp.asarray(client.data.x), jnp.asarray(client.data.y)
-        acts = sel = None
+        metadata = None
     k_sel, k_loc = jax.random.split(key)
 
     # ---- Extract & Selection (uses ONLY the lower part W_G^l(t-1)) ----
-    metadata = None
     if cfg.use_selection:
-        if sel is None:
+        if metadata is None:
             acts = model.apply_lower(params, x)                   # A_k^[j]
             sel = select_metadata(
                 acts, y, k_sel, num_classes=num_classes,
@@ -121,11 +154,11 @@ def client_round(model: SplitModel, params: PyTree, client: ClientData,
                 kmeans_iters=cfg.kmeans_iters,
                 use_pallas=cfg.use_pallas_selection,
                 pca_solver=cfg.pca_solver)
-        sel_acts = jnp.take(acts, sel.indices, axis=0)
-        sel_y = jnp.take(y, sel.indices, axis=0)
-        metadata = (sel_acts, sel_y, sel.valid)
-        ledger.upload("metadata", sel_acts[sel.valid].size * 4
-                      + int(sel.valid.sum()) * 4)
+            metadata = (jnp.take(acts, sel.indices, axis=0),
+                        jnp.take(y, sel.indices, axis=0), sel.valid)
+        sel_acts, _, sel_valid = metadata
+        ledger.upload("metadata", sel_acts[sel_valid].size * 4
+                      + int(sel_valid.sum()) * 4)
     else:
         # Table 2 baseline: ALL activation maps are uploaded.
         acts = model.apply_lower(params, x)
@@ -133,12 +166,7 @@ def client_round(model: SplitModel, params: PyTree, client: ClientData,
         ledger.upload("metadata", acts.size * 4 + y.size * 4)
 
     # ---- LocalUpdate ----
-    bs = min(cfg.local_batch_size, x.shape[0])
-    steps_per_epoch = max(x.shape[0] // bs, 1)
-    perm = jax.random.permutation(k_loc, x.shape[0])
-    perm = jnp.tile(perm, cfg.local_epochs)[: cfg.local_epochs * steps_per_epoch * bs]
-    bx = x[perm].reshape((-1, bs) + x.shape[1:])
-    by = y[perm].reshape(-1, bs)
+    bx, by = local_batches(x, y, k_loc, cfg)
     opt = sgd(cfg.local_lr)
     new_params, _, losses = fa.local_update(
         params, opt, opt.init(params), (bx, by),
@@ -169,22 +197,43 @@ def server_round(model: SplitModel, prev_global: PyTree, upper_init: PyTree,
         total_samples=0, meta_losses=np.asarray(meta_losses))
 
 
-def run_round(model: SplitModel, global_params: PyTree, upper_init: PyTree,
-              clients: List[ClientData], cfg: FLConfig, key: jax.Array,
-              ledger: Optional[CommLedger] = None,
-              num_classes: int = 10) -> RoundResult:
-    ledger = ledger if ledger is not None else CommLedger()
-    keys = jax.random.split(key, len(clients) + 1)
-    pre = select_for_clients(model, global_params, clients, cfg,
-                             keys[:-1], num_classes)
+def run_cohort(model: SplitModel, params: PyTree,
+               clients: List[ClientData], cfg: FLConfig, keys: jax.Array,
+               ledger: CommLedger, num_classes: int, mesh=None):
+    """The client side of one round for a whole cohort, with the engine
+    dispatch in ONE place (shared by ``run_round`` and ``FLSimulation``):
+    the stacked pod engine (``distributed.cohort_round``) when configured
+    and the cohort stacks within budget, else the per-client loop with
+    batched-selection precompute. Returns per-client lists
+    (params, metadata, loss)."""
+    from repro.core import distributed as D
+    if (cfg.distributed_selection and cfg.use_selection
+            and D.cohort_is_stackable(clients)
+            and D.cohort_inputs_fit(clients)):
+        return D.cohort_round(model, params, clients, cfg, keys, ledger,
+                              num_classes, mesh=mesh)
+    pre = select_for_clients(model, params, clients, cfg, keys,
+                             num_classes, mesh=mesh)
     client_params, metadatas, losses = [], [], []
-    for i, (c, k) in enumerate(zip(clients, keys[:-1])):
-        p, m, l = client_round(model, global_params, c, cfg, k, ledger,
+    for i, (c, k) in enumerate(zip(clients, keys)):
+        p, m, l = client_round(model, params, c, cfg, k, ledger,
                                num_classes,
                                precomputed=None if pre is None else pre[i])
         client_params.append(p)
         metadatas.append(m)
         losses.append(l)
+    return client_params, metadatas, losses
+
+
+def run_round(model: SplitModel, global_params: PyTree, upper_init: PyTree,
+              clients: List[ClientData], cfg: FLConfig, key: jax.Array,
+              ledger: Optional[CommLedger] = None,
+              num_classes: int = 10, mesh=None) -> RoundResult:
+    ledger = ledger if ledger is not None else CommLedger()
+    keys = jax.random.split(key, len(clients) + 1)
+    client_params, metadatas, losses = run_cohort(
+        model, global_params, clients, cfg, keys[:-1], ledger, num_classes,
+        mesh=mesh)
     res = server_round(model, global_params, upper_init, client_params,
                        metadatas, cfg, keys[-1])
     res.client_losses = losses

@@ -274,14 +274,23 @@ def representatives(x: jnp.ndarray, km: KMeansState,
                     mask: Optional[jnp.ndarray] = None,
                     use_pallas: bool = False) -> jnp.ndarray:
     """Paper: 'within each cluster choose the sample closest in Euclidean
-    distance to the cluster centre'. Returns (K,) indices into x rows
-    (empty cluster -> index of globally nearest valid point, masked later)."""
+    distance to the cluster centre'. Returns (K,) indices into x rows.
+
+    An EMPTY cluster (``km.cluster_sizes[j] == 0``) yields the index of the
+    valid point globally nearest to that cluster's centre, so every returned
+    index is a sensible row of x; consumers still mask empty slots via
+    ``cluster_sizes > 0``. (It used to be row 0 — the argmin of an all-BIG
+    column.) With no valid rows at all every index degenerates to 0."""
     n, k = x.shape[0], km.centroids.shape[0]
     valid = jnp.ones((n,), bool) if mask is None else mask.astype(bool)
     d = _pairwise_sq_dists(x, km.centroids, use_pallas)   # (N, K)
+    dvalid = jnp.where(valid[:, None], d, BIG)
     same = km.assignment[:, None] == jnp.arange(k)[None, :]
-    d = jnp.where(same & valid[:, None], d, BIG)
-    return jnp.argmin(d, axis=0).astype(jnp.int32)
+    dsame = jnp.where(same, dvalid, BIG)
+    empty = km.cluster_sizes <= 0
+    idx = jnp.where(empty, jnp.argmin(dvalid, axis=0),
+                    jnp.argmin(dsame, axis=0))
+    return idx.astype(jnp.int32)
 
 
 # --------------------------------------------------------------------------
@@ -359,6 +368,17 @@ def select_metadata(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
     w = jnp.min(lmask, axis=1) <= 0.0                        # row admissible
     drep = jnp.where(same & w[:, None], own[:, None], BIG)
     idx = jnp.argmin(drep, axis=0).astype(jnp.int32)
+
+    # empty-slot contract (matches ``representatives``): the admissible row
+    # nearest the slot's centre. Computed unconditionally — on the jnp path
+    # the pairwise matrix is the same expression the final ``_lloyd_step``
+    # just evaluated, so XLA CSEs it to ~zero cost (a lax.cond would block
+    # that, and under vmap both branches run anyway); the Pallas path pays
+    # one extra distance pass in kmeans_iters+2.
+    dfull = jnp.where(lmask <= 0.0,
+                      _pairwise_sq_dists(feats, c, use_pallas), BIG)
+    empty = sizes <= 0
+    idx = jnp.where(empty, jnp.argmin(dfull, axis=0).astype(jnp.int32), idx)
     return Selection(idx, sizes > 0, feats)
 
 

@@ -31,13 +31,20 @@ class FLServer:
         return np.asarray(
             jax.random.choice(key, num_available, (m,), replace=False))
 
+    def broadcast_weights(self, num_clients: int) -> int:
+        """server -> clients: the cohort downloads W_G(t-1) when it is
+        FORMED (so round 0's initial distribution is counted, and every
+        broadcast is attributed to the cohort that actually received it —
+        it used to be charged post-round against the next cohort's size).
+        Returns the bytes charged."""
+        nbytes = sum(a.size * 4 for a in jax.tree.leaves(self.global_params))
+        self.ledger.download("weights", nbytes * num_clients)
+        return nbytes * num_clients
+
     def aggregate(self, client_params: List[PyTree], metadatas: List[tuple],
                   key: jax.Array) -> RoundResult:
         res = server_round(self.model, self.global_params, self.upper_init,
                            client_params, metadatas, self.cfg, key)
         self.global_params = res.global_params
         self.round_idx += 1
-        # server -> clients: next round's global weights
-        nbytes = sum(a.size * 4 for a in jax.tree.leaves(self.global_params))
-        self.ledger.download("weights", nbytes * len(client_params))
         return res

@@ -4,7 +4,9 @@ Drives FLServer + FLClients for T rounds over a non-IID partition, evaluating
 the composed model M_COM(t) on the test set each ``eval_every`` rounds, and
 tracking the train-vs-test accuracy gap (the paper's Fig. 2 overfitting
 evidence) plus communication bytes with/without selection (the efficiency
-claim)."""
+claim). With ``cfg.distributed_selection`` the cohort's client side runs
+through the pod-scale stacked engine (``repro.core.distributed``) instead of
+the per-client Python loop — same math, optionally sharded over ``mesh``."""
 from __future__ import annotations
 
 import time
@@ -16,7 +18,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core.compose import evaluate
-from repro.core.rounds import select_for_clients
+from repro.core.rounds import run_cohort
 from repro.core.split import SplitModel
 from repro.data.datasets import Dataset
 from repro.data.partition import ClientData
@@ -31,21 +33,31 @@ class SimulationResult:
     fedavg_acc: List[float] = field(default_factory=list)    # plain W_G(t) accuracy
     meta_train_acc: List[float] = field(default_factory=list)  # on D_M (overfit probe)
     metadata_counts: List[int] = field(default_factory=list)
+    cohort_samples: List[int] = field(default_factory=list)  # sum_k |D_k| per round
     client_loss: List[float] = field(default_factory=list)
     comm: dict = field(default_factory=dict)
     wall_time: float = 0.0
 
     @property
     def selected_fraction(self) -> float:
-        tot = self.comm.get("total_samples", 1)
-        return (self.metadata_counts[-1] / tot) if self.metadata_counts else 0.0
+        """The paper's headline |D_M|/|D_k|, for the LAST round: selected
+        metadata over the samples of the clients that actually participated.
+        (Dividing by ALL clients' samples understated the fraction whenever
+        clients_per_round < num_clients.)"""
+        if not self.metadata_counts:
+            return 0.0
+        denom = (self.cohort_samples[-1] if self.cohort_samples
+                 else self.comm.get("total_samples", 1))
+        return self.metadata_counts[-1] / max(denom, 1)
 
 
 class FLSimulation:
     def __init__(self, model: SplitModel, clients: List[ClientData],
                  test: Dataset, cfg: FLConfig, seed: int = 0,
-                 client_speeds: Optional[np.ndarray] = None):
+                 client_speeds: Optional[np.ndarray] = None,
+                 mesh=None):
         self.model, self.cfg, self.test = model, cfg, test
+        self.mesh = mesh                 # 'data'-axis mesh for sharded selection
         key = jax.random.PRNGKey(seed)
         k_init, self.key = jax.random.split(key)
         params = model.init(k_init)
@@ -54,6 +66,16 @@ class FLSimulation:
         speeds = client_speeds if client_speeds is not None else np.ones(len(clients))
         self.clients = [FLClient(c, s) for c, s in zip(clients, speeds)]
         self.num_classes = test.num_classes
+
+    def _cohort_round(self, cohort: List[FLClient], keys: jax.Array):
+        """Client side of one round -> (params, metadatas, losses) lists.
+        ``rounds.run_cohort`` owns the engine dispatch: the stacked pod
+        engine when configured (and the cohort stacks within budget), else
+        the per-client loop with batched-selection precompute."""
+        return run_cohort(
+            self.model, self.server.global_params,
+            [c.client for c in cohort], self.cfg, keys,
+            self.server.ledger, self.num_classes, mesh=self.mesh)
 
     def run(self, rounds: int, eval_every: int = 1,
             verbose: bool = False) -> SimulationResult:
@@ -70,22 +92,14 @@ class FLSimulation:
             keys = jax.random.split(k_round, len(idx))
             k_server = jax.random.fold_in(k_round, len(idx))
             cohort = [self.clients[int(i)] for i in idx]
-            # Extract&Selection for the whole cohort in one vmapped call
-            # (falls back to the per-client path on ragged data shapes)
-            pre = select_for_clients(
-                self.model, self.server.global_params,
-                [c.client for c in cohort], self.cfg, keys,
-                self.num_classes)
-            cparams, metas, losses = [], [], []
-            for j, (c, k) in enumerate(zip(cohort, keys)):
-                p, m, l = c.run(
-                    self.model, self.server.global_params, self.cfg, k,
-                    self.server.ledger, self.num_classes,
-                    precomputed=None if pre is None else pre[j])
-                cparams.append(p); metas.append(m); losses.append(l)
+            # the formed cohort downloads W_G(t-1) NOW (round 0 included)
+            self.server.broadcast_weights(len(cohort))
+            cparams, metas, losses = self._cohort_round(cohort, keys)
             rr = self.server.aggregate(cparams, metas, k_server)
             res.client_loss.append(float(np.mean(losses)))
             res.metadata_counts.append(rr.metadata_count)
+            res.cohort_samples.append(
+                sum(len(c.client.data) for c in cohort))
             if (t + 1) % eval_every == 0 or t == rounds - 1:
                 acc = evaluate(self.model, rr.composed_params,
                                self.test.x, self.test.y)

@@ -1,5 +1,9 @@
 """Integration tests for the paper's core: split network, FedAvg, metadata
-selection, meta-training, compose (Algorithm 1) — on the WRN and a tiny LM."""
+selection, meta-training, compose (Algorithm 1) — on the WRN and a tiny LM.
+Includes the pod-engine equalities (chunked streaming, stacked LocalUpdate,
+distributed rounds) and the LocalUpdate epoch-shuffle regression."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,14 +11,29 @@ import pytest
 
 from repro.configs import FLConfig, get_config, get_wrn_config
 from repro.core import fedavg as fa
+from repro.core import distributed as dist
 from repro.core.compose import evaluate
 from repro.core.meta_training import meta_train
-from repro.core.rounds import run_round
-from repro.data import SyntheticImageDataset, partition_k_shards
+from repro.core.rounds import (epoch_permutations, local_batches, run_round,
+                               select_for_clients)
+from repro.data import (SyntheticImageDataset, SyntheticTokenDataset,
+                        partition_k_shards)
 from repro.models.transformer import make_split_lm
 from repro.models.wrn import make_split_wrn
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _rounds_identical(a, b):
+    assert a.metadata_count == b.metadata_count
+    assert a.client_losses == b.client_losses
+    assert _trees_equal(a.global_params, b.global_params)
+    assert _trees_equal(a.composed_params, b.composed_params)
 
 
 @pytest.fixture(scope="module")
@@ -171,6 +190,26 @@ class TestAlgorithm1:
                         jax.tree.leaves(r2.composed_params)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
+    def test_select_for_clients_handles_token_clients(self, wrn):
+        """Regression: the cohort size guard used to ``eval_shape`` the
+        lower forward with a hardcoded f32 input, so INT token clients (the
+        LM generalization) crashed batched selection with a TypeError
+        ('Indexer must have integer type') before ever selecting."""
+        cfg = get_config("qwen2-0.5b").reduced()
+        model, _ = make_split_lm(cfg)
+        params = model.init(KEY)
+        ds = SyntheticTokenDataset(120, seq_len=16, vocab_size=cfg.vocab_size,
+                                   num_classes=4)
+        clients = partition_k_shards(ds, 2, k_classes=2,
+                                     samples_per_client=40)
+        flcfg = FLConfig(pca_components=8, clusters_per_class=2,
+                         kmeans_iters=3)
+        keys = jax.random.split(KEY, 2)
+        pre = select_for_clients(model, params, clients, flcfg, keys, 4)
+        assert pre is not None and len(pre) == 2
+        sel_acts, sel_y, valid = pre[0][2]
+        assert sel_acts.shape[0] == 4 * 2 and valid.shape == (4 * 2,)
+
     def test_without_selection_uploads_everything(self, wrn):
         cfg, model, params = wrn
         from repro.fl.comms import CommLedger
@@ -186,3 +225,134 @@ class TestAlgorithm1:
         client_round(model, params, clients[0], fl_all, KEY, led_all, 10)
         # the paper's communication claim: selection shrinks metadata upload
         assert led_sel.up["metadata"] < led_all.up["metadata"] / 2
+
+
+class TestEpochShuffling:
+    """Regression for the LocalUpdate shuffle bug: ``jnp.tile(perm, E)``
+    replayed ONE permutation every local epoch, so multi-epoch SGD saw a
+    fixed batch order."""
+
+    def test_fresh_permutation_each_epoch(self):
+        perms = np.asarray(epoch_permutations(KEY, 64, 3))
+        # each row is a permutation ...
+        for e in range(3):
+            assert sorted(perms[e]) == list(range(64))
+        # ... and multi-epoch batch order actually differs across epochs
+        assert not np.array_equal(perms[0], perms[1])
+        assert not np.array_equal(perms[1], perms[2])
+        # epoch 0 keeps the seed's stream (single-epoch runs unchanged)
+        np.testing.assert_array_equal(
+            perms[0], np.asarray(jax.random.permutation(KEY, 64)))
+
+    def test_local_batches_differ_across_epochs(self):
+        x = jnp.arange(40.0)[:, None]
+        y = jnp.arange(40)
+        cfg = FLConfig(local_batch_size=10, local_epochs=2)
+        bx, _ = local_batches(x, y, KEY, cfg)
+        assert bx.shape == (8, 10, 1)          # 2 epochs x 4 steps
+        assert not np.array_equal(np.asarray(bx[:4]).ravel(),
+                                  np.asarray(bx[4:]).ravel())
+
+
+class TestDistributedEngine:
+    """The pod-scale engine (repro.core.distributed) must be bit-identical
+    to the sequential per-client loop: chunked streaming, stacked
+    LocalUpdate, and the full distributed round."""
+
+    @pytest.fixture(scope="class")
+    def setting(self, wrn):
+        cfg, model, params = wrn
+        ds = SyntheticImageDataset(300, image_size=cfg.image_size, seed=0)
+        clients = partition_k_shards(ds, 4, k_classes=2,
+                                     samples_per_client=40)
+        flcfg = FLConfig(num_clients=4, clients_per_round=4,
+                         local_batch_size=20, pca_components=8,
+                         clusters_per_class=3, kmeans_iters=4,
+                         meta_epochs=1, meta_batch_size=10, local_epochs=2)
+        _, upper0 = model.split(params)
+        seq = run_round(model, params, upper0, clients,
+                        dataclasses.replace(flcfg, batched_selection=False),
+                        KEY)
+        return model, params, upper0, clients, flcfg, seq
+
+    def test_stacked_local_update_equals_per_client_loop(self, setting):
+        model, params, _, clients, flcfg, _ = setting
+        from repro.optim import sgd
+        xs, ys = dist.cohort_arrays(clients)
+        keys = jax.random.split(KEY, len(clients))
+        st_p, st_l = dist.local_update_cohort(model, params, xs, ys, keys,
+                                              flcfg)
+        opt = sgd(flcfg.local_lr)
+        for i in range(len(clients)):
+            k_loc = jax.random.split(keys[i])[1]
+            bx, by = local_batches(xs[i], ys[i], k_loc, flcfg)
+            p, _, losses = fa.local_update(
+                params, opt, opt.init(params), (bx, by),
+                lambda p_, b: model.loss(p_, b))
+            assert float(losses.mean()) == float(st_l[i])
+            assert _trees_equal(p, jax.tree.map(lambda a: a[i], st_p))
+
+    def test_distributed_round_equals_sequential(self, setting):
+        model, params, upper0, clients, flcfg, seq = setting
+        got = run_round(model, params, upper0, clients,
+                        dataclasses.replace(flcfg,
+                                            distributed_selection=True), KEY)
+        _rounds_identical(got, seq)
+
+    def test_chunked_streaming_bitident_across_boundary(self, setting,
+                                                        monkeypatch):
+        """Both sides of the old MAX_BATCHED_ELEMENTS cliff: a cohort whose
+        stack exceeds the budget now STREAMS in chunks (no sequential
+        fallback) and still matches the one-stack and sequential paths
+        bit-for-bit."""
+        import repro.core.rounds as R
+        model, params, upper0, clients, flcfg, seq = setting
+        keys = jax.random.split(KEY, len(clients) + 1)[:-1]
+
+        # below the boundary: one stack (no chunking)
+        pre_stack = select_for_clients(model, params, clients, flcfg, keys,
+                                       10)
+        assert pre_stack is not None
+        one_stack = run_round(model, params, upper0, clients, flcfg, KEY)
+        _rounds_identical(one_stack, seq)
+
+        # shrink the budget so this same cohort crosses the boundary:
+        # selection must keep returning (chunked), not fall back to None
+        monkeypatch.setattr(R, "MAX_BATCHED_ELEMENTS", 1 << 18)
+        x_shape = clients[0].data.x.shape
+        assert dist.auto_chunk_size(model, params, x_shape, jnp.float32,
+                                    len(clients)) > 0
+        pre_chunk = select_for_clients(model, params, clients, flcfg, keys,
+                                       10)
+        assert pre_chunk is not None
+        for a, b in zip(pre_stack, pre_chunk):
+            for ma, mb in zip(a[2], b[2]):   # (sel_acts, sel_y, valid)
+                assert np.array_equal(np.asarray(ma), np.asarray(mb))
+        chunked = run_round(model, params, upper0, clients, flcfg, KEY)
+        _rounds_identical(chunked, seq)
+        # and through the distributed engine as well
+        chunked_dist = run_round(
+            model, params, upper0, clients,
+            dataclasses.replace(flcfg, distributed_selection=True), KEY)
+        _rounds_identical(chunked_dist, seq)
+
+        # the escape hatch survives: when even the RAW INPUT stack exceeds
+        # the budget (chunking can't help — the engine must hold it), both
+        # paths fall back to the sequential per-client loop, which never
+        # stacks, and still match
+        monkeypatch.setattr(R, "MAX_BATCHED_ELEMENTS", 1 << 10)
+        assert not dist.cohort_inputs_fit(clients)
+        assert select_for_clients(model, params, clients, flcfg, keys,
+                                  10) is None
+        tiny = run_round(model, params, upper0, clients,
+                         dataclasses.replace(flcfg,
+                                             distributed_selection=True),
+                         KEY)
+        _rounds_identical(tiny, seq)
+
+    def test_explicit_chunk_size_knob(self, setting):
+        model, params, upper0, clients, flcfg, seq = setting
+        got = run_round(model, params, upper0, clients,
+                        dataclasses.replace(flcfg, selection_chunk_size=3),
+                        KEY)
+        _rounds_identical(got, seq)

@@ -1,6 +1,8 @@
 """Distributed-step tests on a subprocess smoke mesh (4-8 host devices):
 the stacked-clients FedAvg train step EXECUTES and matches the sequential
-simulator's math; dryrun lowers for representative pairs.
+simulator's math; the pod-scale selection engine (repro.core.distributed)
+shards a round over the mesh bit-identically; dryrun lowers for
+representative pairs.
 
 These spawn subprocesses because jax pins the host device count at first
 init (the main pytest process must keep seeing 1 device)."""
@@ -144,6 +146,63 @@ def test_dryrun_multipod_smoke():
         env=env, capture_output=True, text=True, timeout=560)
     assert r.returncode == 0, (r.stdout + r.stderr)[-2500:]
     assert "[ok]" in r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_selection_round_matches_sequential_simulator():
+    """The pod engine on a smoke mesh of 8 host devices: shard_map'd
+    Extract&Selection + sharded stacked LocalUpdate over the client axis
+    must reproduce the sequential per-client simulator bit-for-bit — with
+    and without chunked streaming on top."""
+    code = """
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import FLConfig, get_wrn_config
+from repro.core.rounds import run_round
+from repro.core.distributed import selection_mesh
+from repro.data import SyntheticImageDataset, partition_k_shards
+from repro.models.wrn import make_split_wrn
+
+assert len(jax.devices()) == 8
+KEY = jax.random.PRNGKey(0)
+cfg = get_wrn_config().reduced()
+model = make_split_wrn(cfg)
+params = model.init(KEY)
+ds = SyntheticImageDataset(500, image_size=cfg.image_size, seed=0)
+clients = partition_k_shards(ds, 6, k_classes=2, samples_per_client=40)
+flcfg = FLConfig(num_clients=6, clients_per_round=6, local_batch_size=20,
+                 pca_components=8, clusters_per_class=3, kmeans_iters=4,
+                 meta_epochs=1, meta_batch_size=10, local_epochs=2)
+_, upper0 = model.split(params)
+mesh = selection_mesh()          # (8,) 'data' mesh; 6 clients pad to 8
+
+def check(a, b):
+    assert a.metadata_count == b.metadata_count
+    assert a.client_losses == b.client_losses
+    for x, y in zip(jax.tree.leaves(a.global_params),
+                    jax.tree.leaves(b.global_params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree.leaves(a.composed_params),
+                    jax.tree.leaves(b.composed_params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+seq = run_round(model, params, upper0, clients,
+                dataclasses.replace(flcfg, batched_selection=False), KEY)
+sharded = run_round(model, params, upper0, clients,
+                    dataclasses.replace(flcfg, distributed_selection=True),
+                    KEY, mesh=mesh)
+check(sharded, seq)
+# chunked streaming on top of the sharded path (chunks pad per-chunk)
+sharded_chunked = run_round(
+    model, params, upper0, clients,
+    dataclasses.replace(flcfg, distributed_selection=True,
+                        selection_chunk_size=4), KEY, mesh=mesh)
+check(sharded_chunked, seq)
+print("OK sharded==sequential")
+"""
+    r = run_py(code)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
 
 
 def test_hlo_parser_units():

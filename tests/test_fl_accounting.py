@@ -1,0 +1,133 @@
+"""Regression tests for the simulator's accounting: the selected-fraction
+denominator under partial participation, and the weight-broadcast download
+ledger (charged when the cohort is formed, not post-round). Plus the
+simulator-level equality of the stacked (distributed) cohort path."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig, get_wrn_config
+from repro.data import SyntheticImageDataset, partition_k_shards
+from repro.fl.server import FLServer
+from repro.fl.simulation import FLSimulation
+from repro.models.wrn import make_split_wrn
+
+
+@pytest.fixture(scope="module")
+def setting():
+    cfg = get_wrn_config().reduced()
+    model = make_split_wrn(cfg)
+    train = SyntheticImageDataset(400, image_size=cfg.image_size, seed=0)
+    test = SyntheticImageDataset(100, image_size=cfg.image_size, seed=1)
+    clients = partition_k_shards(train, 4, k_classes=2,
+                                 samples_per_client=40)
+    return model, clients, test
+
+
+def _flcfg(**kw):
+    base = dict(num_clients=4, clients_per_round=4, local_batch_size=20,
+                pca_components=8, clusters_per_class=3, kmeans_iters=4,
+                meta_epochs=1, meta_batch_size=10)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+class TestSelectedFraction:
+    def test_partial_participation_uses_cohort_samples(self, setting):
+        """|D_M|/|D_k| must be over the SAMPLED cohort's samples: with 2 of
+        4 clients participating, dividing by all clients' samples halves
+        the paper's headline fraction."""
+        model, clients, test = setting
+        sim = FLSimulation(model, clients, test, _flcfg(clients_per_round=2),
+                           seed=0)
+        res = sim.run(rounds=1)
+        assert res.cohort_samples == [2 * 40]
+        assert res.comm["total_samples"] == 4 * 40
+        assert res.metadata_counts[-1] > 0
+        assert res.selected_fraction == (
+            res.metadata_counts[-1] / res.cohort_samples[-1])
+        # the buggy denominator (all clients) understates the fraction
+        assert res.selected_fraction != (
+            res.metadata_counts[-1] / res.comm["total_samples"])
+
+    def test_full_participation_unchanged(self, setting):
+        model, clients, test = setting
+        sim = FLSimulation(model, clients, test, _flcfg(), seed=0)
+        res = sim.run(rounds=1)
+        assert res.cohort_samples == [4 * 40]
+        assert res.selected_fraction == (
+            res.metadata_counts[-1] / res.comm["total_samples"])
+
+
+class TestDownloadLedger:
+    def test_broadcast_charged_at_cohort_formation(self, setting):
+        """The cohort downloads W_G(t-1) when it is FORMED — before any
+        aggregation — and ``aggregate`` charges no download at all (it used
+        to charge post-round for however many clients REPORTED BACK, so
+        round 0's initial distribution was never counted and each broadcast
+        was attributed to the wrong cohort size). Discriminates the pre-fix
+        semantics by aggregating FEWER client params (2) than the formed
+        cohort (3): the ledger must show exactly the formation-time charge."""
+        model, clients, test = setting
+        cfg = _flcfg(meta_epochs=1)
+        params = model.init(jax.random.PRNGKey(0))
+        _, upper0 = model.split(params)
+        server = FLServer(model, params, upper0, cfg)
+        nbytes = sum(a.size * 4 for a in jax.tree.leaves(params))
+
+        charged = server.broadcast_weights(3)
+        assert charged == 3 * nbytes
+        assert server.ledger.down["weights"] == 3 * nbytes
+
+        # 2 of the 3 report back (straggler dropped): pre-fix accounting
+        # would now add a 2-client charge post-round; fixed accounting
+        # leaves the ledger at the formation-time 3-client charge
+        rng = np.random.default_rng(0)
+        s = model.config.image_size
+        acts = jax.numpy.asarray(
+            rng.normal(size=(8, s, s, 16)).astype(np.float32))
+        ys = jax.numpy.asarray(rng.integers(0, 10, 8))
+        valid = jax.numpy.ones((8,), bool)
+        server.aggregate([params, params], [(acts, ys, valid)],
+                         jax.random.PRNGKey(1))
+        assert server.ledger.down["weights"] == 3 * nbytes
+
+        # and over a full simulation: one broadcast per round, each for the
+        # formed cohort at the pre-round weights (round 0 included)
+        sim = FLSimulation(model, clients, test, cfg, seed=0)
+        assert sim.server.ledger.total_down == 0
+        res = sim.run(rounds=2)
+        assert res.comm["down"]["weights"] == 2 * 4 * nbytes
+
+    def test_round0_distribution_counted(self, setting):
+        """After a single round the download ledger holds exactly round 0's
+        initial weight distribution to the sampled cohort."""
+        model, clients, test = setting
+        sim = FLSimulation(model, clients, test,
+                           _flcfg(clients_per_round=2), seed=0)
+        nbytes = sum(a.size * 4
+                     for a in jax.tree.leaves(sim.server.global_params))
+        res = sim.run(rounds=1)
+        assert res.comm["down"]["weights"] == 2 * nbytes
+
+
+class TestDistributedSimulatorEquality:
+    def test_distributed_cohort_path_matches_sequential(self, setting):
+        """FLSimulation with the stacked pod engine reproduces the
+        sequential per-client loop bit-for-bit (losses, counts, ledger,
+        accuracies) on the same seed."""
+        model, clients, test = setting
+        r_seq = FLSimulation(model, clients, test, _flcfg(),
+                             seed=0).run(rounds=2)
+        r_dist = FLSimulation(model, clients, test,
+                              _flcfg(distributed_selection=True),
+                              seed=0).run(rounds=2)
+        assert r_dist.metadata_counts == r_seq.metadata_counts
+        assert r_dist.client_loss == r_seq.client_loss
+        assert r_dist.test_acc == r_seq.test_acc
+        assert r_dist.fedavg_acc == r_seq.fedavg_acc
+        assert r_dist.cohort_samples == r_seq.cohort_samples
+        for k in ("up", "down"):
+            assert r_dist.comm[k] == r_seq.comm[k]

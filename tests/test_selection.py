@@ -105,6 +105,74 @@ class TestKMeans:
                 assert int(np.asarray(km.assignment)[r]) == j
 
 
+class TestRepresentativesEmptyClusters:
+    """Contract: an empty cluster yields the index of the valid point
+    globally nearest to that cluster's centre (it used to be the argmin of
+    an all-BIG column — always row 0, regardless of geometry)."""
+
+    def _check_contract(self, x, km, reps, mask=None):
+        xn = np.asarray(x)
+        valid = (np.ones(len(xn), bool) if mask is None
+                 else np.asarray(mask, bool))
+        cents = np.asarray(km.centroids)
+        sizes = np.asarray(km.cluster_sizes)
+        assign = np.asarray(km.assignment)
+        d = ((xn[:, None] - cents[None]) ** 2).sum(-1)
+        d[~valid] = np.inf
+        for j, r in enumerate(np.asarray(reps)):
+            if sizes[j] > 0:
+                assert assign[r] == j          # old contract, unchanged
+            else:
+                assert d[:, j].argmin() == r   # nearest valid point
+
+    def test_empty_cluster_yields_nearest_valid(self):
+        # 3 distinct points, 6 clusters -> empty clusters guaranteed
+        x = jnp.asarray(np.repeat(np.array([[0., 0.], [10., 0.], [0., 10.]],
+                                           np.float32), 4, axis=0))
+        km = kmeans(x, 6, KEY, iters=5)
+        assert (np.asarray(km.cluster_sizes) == 0).any()
+        reps = representatives(x, km)
+        assert np.asarray(reps).max() < x.shape[0]
+        self._check_contract(x, km, reps)
+
+    def test_empty_cluster_masked_path(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(30, 3)), jnp.float32)
+        mask = jnp.asarray([True] * 4 + [False] * 26)   # 4 valid rows, k=6
+        km = kmeans(x, 6, KEY, iters=5, mask=mask)
+        assert (np.asarray(km.cluster_sizes) == 0).any()
+        reps = representatives(x, km, mask=mask)
+        self._check_contract(x, km, reps, mask=mask)
+        # every representative is a VALID row, not an arbitrary row 0
+        for j, r in enumerate(np.asarray(reps)):
+            assert bool(mask[r])
+
+    def test_fused_per_class_matches_reference_with_empty_slots(self):
+        """A class with fewer points than clusters forces empty slots in
+        the masked per-class path; the fused engine's fallback must agree
+        with the reference path's ``representatives(mask=...)``."""
+        rng = np.random.default_rng(1)
+        acts = rng.normal(size=(60, 12)).astype(np.float32)
+        labels = np.full(60, 1, np.int64)
+        labels[:2] = 0                          # class 0: 2 points, 4 slots
+        kw = dict(num_classes=2, clusters_per_class=4, pca_components=6,
+                  kmeans_iters=6)
+        a = select_metadata(jnp.asarray(acts), jnp.asarray(labels), KEY, **kw)
+        b = select_metadata_reference(jnp.asarray(acts), jnp.asarray(labels),
+                                      KEY, **kw)
+        assert not np.asarray(a.valid).all()    # empty slots really exist
+        np.testing.assert_array_equal(np.asarray(a.indices),
+                                      np.asarray(b.indices))
+        np.testing.assert_array_equal(np.asarray(a.valid),
+                                      np.asarray(b.valid))
+        # empty slots of class 0 point at class-0 rows (the admissible set)
+        idx = np.asarray(a.indices).reshape(2, 4)
+        valid = np.asarray(a.valid).reshape(2, 4)
+        for j in range(4):
+            if not valid[0, j]:
+                assert labels[idx[0, j]] == 0
+
+
 class TestSelectMetadata:
     def test_paper_shape_contract(self):
         """20 clusters/class x 10 classes -> 200 selected (Table 5 setup)."""
