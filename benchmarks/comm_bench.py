@@ -1,0 +1,158 @@
+"""Communication benchmark over the transport layer -> BENCH_comms.json.
+
+The paper's claim is that the knowledge exchanged per round is ~1.6% of the
+raw local data; the transport layer makes that claim BYTE-TRUE (every
+ledger entry is the exact encoded frame length) and then pushes below it
+with the f16/int8 codecs. This benchmark runs the same multi-round
+simulation once per codec (same seed: identical sampling, selections and
+LocalUpdates — only the knowledge bytes and the server's decoded metadata
+differ) plus the Table-2 upload-everything baseline, and reports per codec:
+
+  * selected-knowledge upload bytes per round (the paper's payload)
+  * weight up/down bytes per round (codec-independent, framing-true)
+  * knowledge bytes as a fraction of the cohort's raw data bytes
+    (the paper's ~1.6%; int8 lands ~4x below raw_f32)
+  * final composed-model accuracy — the cost of lossy knowledge is
+    OBSERVABLE because the server meta-trains on the decoded payload
+
+Seed-deterministic by construction: every RNG is keyed off fixed seeds.
+Writes BENCH_comms.json at the repo root (tracked PR over PR, like
+BENCH_selection.json) and returns the CSV rows for benchmarks/run.py
+(``--only comms``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs import FLConfig, get_wrn_config
+from repro.data import SyntheticImageDataset, partition_k_shards
+from repro.fl.simulation import FLSimulation
+from repro.models.wrn import make_split_wrn
+
+CODECS = ("raw_f32", "f16", "int8")
+ROUNDS = 5
+NUM_CLIENTS, SAMPLES_PER_CLIENT = 4, 300
+PAPER_FRACTION = 0.016          # the claim the codecs push below
+
+
+def _flcfg(**kw):
+    """The learning-capable operating point (mirrors the system test's
+    convergent setting at this container's 1-core scale; meta epochs/batch
+    are sized for the |D_M| rows that actually cross the wire)."""
+    base = dict(num_clients=NUM_CLIENTS, clients_per_round=NUM_CLIENTS,
+                local_epochs=2, local_batch_size=50, local_lr=0.1,
+                pca_components=24, clusters_per_class=4, kmeans_iters=8,
+                meta_epochs=40, meta_batch_size=8, meta_lr=0.05)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _setting():
+    cfg = get_wrn_config().reduced()
+    model = make_split_wrn(cfg)
+    train = SyntheticImageDataset(3000, image_size=cfg.image_size,
+                                  num_classes=10, modes_per_class=3,
+                                  noise=0.25, seed=0)
+    test = SyntheticImageDataset(1000, image_size=cfg.image_size,
+                                 num_classes=10, modes_per_class=3,
+                                 noise=0.25, seed=1)
+    clients = partition_k_shards(train, NUM_CLIENTS, k_classes=3,
+                                 samples_per_client=SAMPLES_PER_CLIENT,
+                                 seed=0)
+    return model, clients, test
+
+
+def _raw_cohort_bytes(clients):
+    """The denominator of the paper's fraction: the cohort's raw local
+    data, at its native dtype."""
+    return sum(np.asarray(c.data.x).nbytes + np.asarray(c.data.y).nbytes
+               for c in clients)
+
+
+def run():
+    model, clients, test = _setting()
+    raw_bytes = _raw_cohort_bytes(clients)
+    rows, report = [], {"rounds": ROUNDS, "clients": NUM_CLIENTS,
+                        "samples_per_client": SAMPLES_PER_CLIENT,
+                        "raw_cohort_bytes": raw_bytes,
+                        "paper_fraction": PAPER_FRACTION, "codecs": {}}
+
+    for codec in CODECS:
+        t0 = time.time()
+        sim = FLSimulation(model, clients, test, _flcfg(
+            transport_codec=codec), seed=0)
+        res = sim.run(rounds=ROUNDS, eval_every=ROUNDS)
+        know = res.comm["up"]["metadata"] / ROUNDS
+        upw = res.comm["up"]["weights"] / ROUNDS
+        down = res.comm["down"]["weights"] / ROUNDS
+        frac = know / raw_bytes
+        acc = float(res.test_acc[-1])
+        report["codecs"][codec] = {
+            "knowledge_up_bytes_per_round": know,
+            "weights_up_bytes_per_round": upw,
+            "weights_down_bytes_per_round": down,
+            "knowledge_fraction_of_raw": frac,
+            "final_acc": acc,
+            "selected_fraction": float(res.selected_fraction),
+            "wall_s": time.time() - t0,
+        }
+        rows.append((f"{codec}_knowledge_up_bytes_per_round", know, None))
+        rows.append((f"{codec}_knowledge_fraction_of_raw", frac,
+                     f"paper claims ~{PAPER_FRACTION}"))
+        rows.append((f"{codec}_final_acc", acc, None))
+
+    # Table-2 baseline: every activation map uploaded (1 round is enough
+    # for the byte ratio; its trajectory is the tables benchmark's job)
+    sim = FLSimulation(model, clients, test, _flcfg(
+        use_selection=False, meta_epochs=1), seed=0)
+    res = sim.run(rounds=1)
+    full = res.comm["up"]["metadata"]
+    report["full_metadata_up_bytes_per_round"] = full
+    rows.append(("full_metadata_up_bytes_per_round", float(full), None))
+
+    c = report["codecs"]
+    ratio = (c["raw_f32"]["knowledge_up_bytes_per_round"]
+             / max(c["int8"]["knowledge_up_bytes_per_round"], 1))
+    dacc = abs(c["raw_f32"]["final_acc"] - c["int8"]["final_acc"])
+    sel_vs_full = (c["raw_f32"]["knowledge_up_bytes_per_round"]
+                   / max(report["full_metadata_up_bytes_per_round"], 1))
+    report["int8_vs_raw_ratio"] = ratio
+    report["int8_acc_delta"] = dacc
+    report["selection_vs_full_ratio"] = sel_vs_full
+    # NOTE on the absolute fraction: at the reduced split each activation
+    # map is ~5.3x its raw sample's bytes and clusters_per_class/|D_k|
+    # selects ~4% of samples, so the ABSOLUTE fraction sits above the
+    # paper's 1.6% operating point (paper scale: thousands of samples per
+    # client -> ~0.8% selected). What the codec controls — and what this
+    # bench claims — is the 4x the int8 wire takes OFF whatever fraction
+    # the selection knobs produce.
+    report["claims"] = {
+        "int8_knowledge_geq_3.5x_smaller_than_raw": ratio >= 3.5,
+        "int8_final_acc_within_1_point_of_raw": dacc <= 0.01,
+        "int8_divides_knowledge_fraction_geq_3.5x":
+            c["raw_f32"]["knowledge_fraction_of_raw"]
+            >= 3.5 * c["int8"]["knowledge_fraction_of_raw"],
+        "selection_beats_full_upload_geq_10x": sel_vs_full <= 0.1,
+    }
+    rows.append(("int8_vs_raw_knowledge_ratio", ratio, ">=3.5 required"))
+    rows.append(("int8_vs_raw_final_acc_delta", dacc, "<=0.01 required"))
+    rows.append(("selection_vs_full_upload_ratio", sel_vs_full,
+                 "Table 2 comparison"))
+    for claim, ok in report["claims"].items():
+        rows.append((f"claim_{claim}", "PASS" if ok else "FAIL", None))
+
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_comms.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    return rows, report
+
+
+if __name__ == "__main__":
+    for name, val, extra in run()[0]:
+        v = f"{val:.4f}" if isinstance(val, float) else val
+        print(f"{name},{v},{extra if extra is not None else ''}")

@@ -1,10 +1,12 @@
-"""Benchmark runner: one entry per paper table + communication accounting +
-kernel micro-benchmarks + the selection-pipeline suite. Prints
-``name,value,extra`` CSV rows and a paper-claim validation summary; writes
-experiments/bench_results.json and BENCH_selection.json (the §3.1 hot-path
-trajectory tracked PR over PR).
+"""Benchmark runner: one entry per paper table + the transport-layer
+communication benchmark + kernel micro-benchmarks + the selection-pipeline
+suite. Prints ``name,value,extra`` CSV rows and a paper-claim validation
+summary; writes experiments/bench_results.json, BENCH_selection.json (the
+§3.1 hot-path trajectory) and BENCH_comms.json (bytes-per-round + accuracy
+per transport codec), both tracked PR over PR.
 
-  PYTHONPATH=src python -m benchmarks.run [--only tables|kernels|comm|selection]
+  PYTHONPATH=src python -m benchmarks.run \\
+      [--only tables|kernels|comms|selection]
 """
 from __future__ import annotations
 
@@ -66,37 +68,17 @@ def run_tables(results):
 
 
 def run_comm(results):
-    """The paper's communication-efficiency claim (bytes per round)."""
-    from repro.configs import FLConfig, get_wrn_config
-    from repro.data import SyntheticImageDataset, partition_k_shards
-    from repro.fl.simulation import FLSimulation
-    from repro.models.wrn import make_split_wrn
-
-    print("# Communication accounting (per round, 5 clients x 400 samples)")
-    cfg = get_wrn_config().reduced()
-    model = make_split_wrn(cfg)
-    train = SyntheticImageDataset(2500, image_size=cfg.image_size, seed=0)
-    test = SyntheticImageDataset(200, image_size=cfg.image_size, seed=1)
-    clients = partition_k_shards(train, 5, k_classes=2,
-                                 samples_per_client=400)
-    rows = []
-    for sel, name in [(True, "with_selection"), (False, "without_selection")]:
-        flcfg = FLConfig(num_clients=5, clients_per_round=5,
-                         local_batch_size=50, clusters_per_class=4,
-                         pca_components=16, kmeans_iters=5, meta_epochs=1,
-                         use_selection=sel)
-        sim = FLSimulation(model, clients, test, flcfg, seed=0)
-        res = sim.run(rounds=1)
-        c = res.comm
-        rows.append((f"{name}_metadata_up_bytes", float(c["up"]["metadata"]),
-                     None))
-        rows.append((f"{name}_weights_up_bytes", float(c["up"]["weights"]),
-                     None))
-    ratio = rows[0][1] / max(rows[2][1], 1)
-    rows.append(("metadata_reduction_ratio", ratio,
-                 "selection/full (paper: ~0.8%)"))
+    """Byte-true communication benchmark over the transport layer: bytes
+    per round and final accuracy per codec (raw_f32/f16/int8) plus the
+    Table-2 upload-everything baseline -> BENCH_comms.json."""
+    from benchmarks import comm_bench as C
+    print("# Communication (transport codecs, exact wire bytes) "
+          f"-> BENCH_comms.json ({C.NUM_CLIENTS} clients x "
+          f"{C.SAMPLES_PER_CLIENT} samples, {C.ROUNDS} rounds/codec)")
+    rows, report = C.run()
     _emit(rows)
-    results["comm"] = rows
+    results["comms"] = report
+    return report
 
 
 def run_selection(results):
@@ -124,14 +106,15 @@ def run_kernels(results):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=[None, "tables", "kernels", "comm", "selection"])
+                    choices=[None, "tables", "kernels", "comm", "comms",
+                             "selection"])
     args = ap.parse_args(argv)
 
     results = {}
     t0 = time.time()
     if args.only in (None, "selection"):
         run_selection(results)
-    if args.only in (None, "comm"):
+    if args.only in (None, "comm", "comms"):
         run_comm(results)
     if args.only in (None, "kernels"):
         run_kernels(results)

@@ -29,10 +29,13 @@ def main():
           f"{[c.classes.tolist() for c in clients]}")
 
     # 3. FL config: PCA -> K-means -> 1 representative per cluster (§3.1)
+    #    meta_epochs/meta_batch_size are sized for the transport-layer
+    #    semantics: the server meta-trains on exactly the |D_M| rows that
+    #    crossed the wire (32 here — empty-cluster slots never arrive)
     flcfg = FLConfig(num_clients=4, clients_per_round=4, local_epochs=1,
                      local_batch_size=50, local_lr=0.05,
                      pca_components=24, clusters_per_class=4,
-                     meta_epochs=10, meta_batch_size=20, meta_lr=0.05)
+                     meta_epochs=40, meta_batch_size=8, meta_lr=0.05)
 
     # 4. run Algorithm 1 for a few rounds
     sim = FLSimulation(model, clients, test, flcfg, seed=0)

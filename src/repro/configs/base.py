@@ -224,6 +224,10 @@ class FLConfig:
     distributed_selection: bool = False  # stacked cohort_round + shard_map
     selection_chunk_size: int = 0      # >0: stream cohorts this many clients
                                        # at a time (0 = auto by memory budget)
+    # --- transport (repro.fl.transport; every ledger entry = exact bytes) ---
+    transport_codec: str = "raw_f32"   # SelectedKnowledge codec:
+                                       # raw_f32 | f16 | int8 (Pallas
+                                       # quantize when use_pallas_selection)
 
 
 @dataclass(frozen=True)

@@ -330,9 +330,15 @@ def cohort_round(model: SplitModel, params: PyTree,
                  chunk_size: Optional[int] = None):
     """Everything the cohort's clients do in one round — chunked/sharded
     Extract&Selection plus the stacked LocalUpdate — with the same
-    per-client ledger accounting as ``rounds.client_round``. Returns
+    transport-charged ledger accounting as ``rounds.client_round``: the
+    gathered (sel_acts, sel_y, valid) triple is encoded through the cohort
+    entry of ``repro.fl.transport`` (one vmapped quantize for the int8
+    codec — the stack never unbatches for the hot path, only for framing),
+    each UpperUpdate frame is charged per client at its exact size, and the
+    metadata handed to the server is the DECODED wire content. Returns
     per-client lists (params, metadata, loss) interchangeable with the
-    sequential loop's."""
+    sequential loop's — including byte-identical ledger totals."""
+    from repro.fl import transport as T
     assert cfg.use_selection, (
         "cohort_round implements the selection path only; the Table-2 "
         "upload-everything baseline (use_selection=False) runs through the "
@@ -352,19 +358,15 @@ def cohort_round(model: SplitModel, params: PyTree,
         model, params, xs, ys, keys, cfg, num_classes,
         chunk_size=chunk_size, mesh=mesh, gather=True)
 
-    metadatas, per_map = [], int(np.prod(sel_acts.shape[2:]))
-    valid_counts = np.asarray(jax.vmap(jnp.sum)(valid))
-    for i in range(b):
-        metadatas.append((sel_acts[i], sel_ys[i], valid[i]))
-        nvalid = int(valid_counts[i])
-        ledger.upload("metadata", nvalid * per_map * 4 + nvalid * 4)
+    metadatas = T.upload_knowledge_batched(ledger, sel_acts, sel_ys, valid,
+                                           T.knowledge_codec(cfg))
 
     cparams, losses = local_update_cohort(model, params, xs, ys, keys, cfg,
                                           mesh=mesh)
-    pbytes = sum(a.size * 4 for a in jax.tree.leaves(params))
-    ledger.upload("weights", pbytes * b)
     client_params = [jax.tree.map(lambda a, i=i: a[i], cparams)
                      for i in range(b)]
+    for p in client_params:
+        T.upload_update(ledger, p)
     return client_params, metadatas, [float(l) for l in np.asarray(losses)]
 
 

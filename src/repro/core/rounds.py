@@ -135,7 +135,13 @@ def client_round(model: SplitModel, params: PyTree, client: ClientData,
                  num_classes: int, precomputed=None):
     """Client k's work: Extract&Selection + LocalUpdate. ``precomputed`` is
     an optional (x, y, (sel_acts, sel_y, valid)) tuple from
-    ``select_for_clients`` (already on device)."""
+    ``select_for_clients`` (already on device).
+
+    Both uploads flow through ``repro.fl.transport``: the ledger is charged
+    the exact frame bytes, and the metadata handed back is what the server
+    DECODES (valid rows only, dequantized under a lossy
+    ``cfg.transport_codec``), so codec loss is visible to MetaTraining."""
+    from repro.fl import transport as T
     if precomputed is not None:
         x, y, metadata = precomputed
     else:
@@ -144,6 +150,7 @@ def client_round(model: SplitModel, params: PyTree, client: ClientData,
     k_sel, k_loc = jax.random.split(key)
 
     # ---- Extract & Selection (uses ONLY the lower part W_G^l(t-1)) ----
+    codec = T.knowledge_codec(cfg)
     if cfg.use_selection:
         if metadata is None:
             acts = model.apply_lower(params, x)                   # A_k^[j]
@@ -156,14 +163,12 @@ def client_round(model: SplitModel, params: PyTree, client: ClientData,
                 pca_solver=cfg.pca_solver)
             metadata = (jnp.take(acts, sel.indices, axis=0),
                         jnp.take(y, sel.indices, axis=0), sel.valid)
-        sel_acts, _, sel_valid = metadata
-        ledger.upload("metadata", sel_acts[sel_valid].size * 4
-                      + int(sel_valid.sum()) * 4)
+        metadata = T.upload_knowledge(ledger, *metadata, codec)
     else:
         # Table 2 baseline: ALL activation maps are uploaded.
         acts = model.apply_lower(params, x)
-        metadata = (acts, y, jnp.ones((x.shape[0],), bool))
-        ledger.upload("metadata", acts.size * 4 + y.size * 4)
+        metadata = T.upload_knowledge(
+            ledger, acts, y, jnp.ones((x.shape[0],), bool), codec)
 
     # ---- LocalUpdate ----
     bx, by = local_batches(x, y, k_loc, cfg)
@@ -171,26 +176,37 @@ def client_round(model: SplitModel, params: PyTree, client: ClientData,
     new_params, _, losses = fa.local_update(
         params, opt, opt.init(params), (bx, by),
         lambda p, b: model.loss(p, b))
-    ledger.upload("weights", sum(a.size * 4 for a in jax.tree.leaves(new_params)))
+    T.upload_update(ledger, new_params)
     return new_params, metadata, float(losses.mean())
 
 
 def server_round(model: SplitModel, prev_global: PyTree, upper_init: PyTree,
                  client_params: List[PyTree], metadatas: List[tuple],
-                 cfg: FLConfig, key: jax.Array) -> RoundResult:
-    """Server's work: aggregate metadata, MetaTraining, ModelCompose, Eq. 2."""
+                 cfg: FLConfig, key: jax.Array,
+                 fedavg_weights: Optional[List[float]] = None) -> RoundResult:
+    """Server's work: aggregate metadata, MetaTraining, ModelCompose, Eq. 2.
+
+    ``metadatas`` are the DECODED SelectedKnowledge triples — the transport
+    layer sends valid slots only, so per-client row counts vary (and can be
+    zero for a client whose every cluster came back empty)."""
     acts = jnp.concatenate([m[0] for m in metadatas], 0)
     ys = jnp.concatenate([m[1] for m in metadatas], 0)
     valid = jnp.concatenate([m[2] for m in metadatas], 0)
 
-    upper, meta_losses = mt.meta_train(
-        upper_init, model.upper_loss, acts, ys,
-        epochs=cfg.meta_epochs, batch_size=cfg.meta_batch_size,
-        lr=cfg.meta_lr, l2=cfg.meta_l2, key=key, valid=valid)
+    if acts.shape[0] == 0:      # nothing arrived: W_S^u(t) stays W_G^u(0)
+        upper, meta_losses = upper_init, jnp.zeros((0,))
+    else:
+        upper, meta_losses = mt.meta_train(
+            upper_init, model.upper_loss, acts, ys,
+            epochs=cfg.meta_epochs, batch_size=cfg.meta_batch_size,
+            lr=cfg.meta_lr, l2=cfg.meta_l2, key=key, valid=valid)
 
     # ModelCompose: lower layers from W_G^l(t-1), upper from W_S^u(t)
     composed = model.merge(model.split(prev_global)[0], upper)
-    new_global = fa.weight_average(client_params)
+    # Eq. 2, optionally with the straggler/deadline mask (0-weight clients
+    # missed FLServer.deadline; None = every client counts, the exact
+    # unweighted mean — bit-identical to the no-deadline path)
+    new_global = fa.weight_average(client_params, weights=fedavg_weights)
     return RoundResult(
         global_params=new_global, composed_params=composed,
         upper_trained=upper, metadata_count=int(valid.sum()),

@@ -20,8 +20,11 @@ single label-masked problem over ``num_classes * clusters_per_class``
 cluster slots — one distance evaluation per sweep instead of one per class —
 and Lloyd sweeps exit early once the centroids reach their fixed point
 (bit-identical result to running all ``kmeans_iters`` sweeps, since a
-converged sweep is a no-op). ``select_metadata_batched`` vmaps the whole
-pipeline across a stacked cohort of clients.
+converged sweep is a no-op). The final sweep's (assign, mindist, sums,
+counts) ride the while_loop carry, so the old post-loop recompute sweep
+only runs (under ``lax.cond``) when the loop dies at the iteration cap
+without converging. ``select_metadata_batched`` vmaps the whole pipeline
+across a stacked cohort of clients.
 
 ``select_metadata_reference`` keeps the seed implementation (per-class
 ``vmap`` of independent K-means runs, full distance matrices re-read through
@@ -189,28 +192,51 @@ def _lloyd_step(x: jnp.ndarray, c: jnp.ndarray, lmask: jnp.ndarray,
 
 
 def _lloyd_iterate(x: jnp.ndarray, c0: jnp.ndarray, lmask: jnp.ndarray,
-                   iters: int, use_pallas: bool) -> jnp.ndarray:
+                   iters: int, use_pallas: bool):
     """Run Lloyd sweeps until the centroids reach their fixed point (or the
     ``iters`` cap). Early exit is bit-identical to running all sweeps: once
-    ``new_c == c``, every later sweep recomputes exactly the same state."""
+    ``new_c == c``, every later sweep recomputes exactly the same state.
 
-    def update(c):
-        _, _, sums, counts = _lloyd_step(x, c, lmask, use_pallas)
+    Returns (centroids, (assign, mindist, sums, counts)) — the final
+    sweep's statistics ride through the while_loop carry, so callers get
+    them WITHOUT a separate post-loop ``_lloyd_step``. On a convergence
+    exit the carried stats were computed at centroids equal to the returned
+    ones (``newc == c``), so they ARE the final stats; only a cap exit
+    (non-converged after ``iters`` sweeps, whose carried stats belong to
+    the penultimate centroids) pays a ``lax.cond`` recompute — bit-identical
+    to the old always-recompute by construction."""
+
+    def sweep(c):
+        assign, mind, sums, counts = _lloyd_step(x, c, lmask, use_pallas)
         newc = sums / jnp.maximum(counts, 1.0)[:, None]
-        # keep empty clusters where they were (classic Lloyd behaviour)
-        return jnp.where(counts[:, None] > 0, newc, c)
+        # keep empty clusters where they were (classic Lloyd behaviour);
+        # the cast keeps the carry dtype-stable when x is not f32 (sums is
+        # always f32 via preferred_element_type) — a no-op for f32
+        newc = jnp.where(counts[:, None] > 0, newc, c).astype(c.dtype)
+        return newc, (assign, mind, sums, counts)
 
     def cond(state):
-        i, c, done = state
+        i, _, _, done = state
         return (i < iters) & jnp.logical_not(done)
 
     def body(state):
-        i, c, _ = state
-        newc = update(c)
-        return i + 1, newc, jnp.all(newc == c)
+        i, c, _, _ = state
+        newc, stats = sweep(c)
+        return i + 1, newc, stats, jnp.all(newc == c)
 
-    _, c, _ = jax.lax.while_loop(cond, body, (0, c0, jnp.asarray(False)))
-    return c
+    n, k = x.shape[0], c0.shape[0]
+    # carry dtypes must match _lloyd_step's: mindist and counts come back
+    # in x.dtype (sums is f32 via preferred_element_type)
+    stats0 = (jnp.zeros((n,), jnp.int32), jnp.zeros((n,), x.dtype),
+              jnp.zeros((k, x.shape[1]), jnp.float32),
+              jnp.zeros((k,), x.dtype))
+    _, c, stats, done = jax.lax.while_loop(
+        cond, body, (0, c0, stats0, jnp.asarray(False)))
+    # cap exit (or iters == 0, where the loop never ran): the carried stats
+    # lag the returned centroids by one sweep — recompute at c
+    stats = jax.lax.cond(done, lambda: stats,
+                         lambda: _lloyd_step(x, c, lmask, use_pallas))
+    return c, stats
 
 
 def kmeans_init(x: jnp.ndarray, k: int, key: jax.Array,
@@ -265,8 +291,8 @@ def kmeans(x: jnp.ndarray, k: int, key: jax.Array, iters: int = 25,
     valid = (jnp.ones((n,), bool) if mask is None else mask.astype(bool))
     lmask = jnp.where(valid, 0.0, BIG)[:, None] * jnp.ones((1, k), x.dtype)
     c0 = kmeans_init(x, k, key, mask, use_pallas=use_pallas)
-    c = _lloyd_iterate(x, c0, lmask, iters, use_pallas)
-    assign, own, _, sizes = _lloyd_step(x, c, lmask, use_pallas)
+    c, (assign, own, _, sizes) = _lloyd_iterate(x, c0, lmask, iters,
+                                                use_pallas)
     return KMeansState(c, assign, own, sizes)
 
 
@@ -360,8 +386,8 @@ def select_metadata(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
     lmask = jnp.where(labels[:, None] == slot_class[None, :], 0.0,
                       BIG).astype(feats.dtype)
 
-    c = _lloyd_iterate(feats, c0, lmask, kmeans_iters, use_pallas)
-    assign, own, _, sizes = _lloyd_step(feats, c, lmask, use_pallas)
+    c, (assign, own, _, sizes) = _lloyd_iterate(feats, c0, lmask,
+                                                kmeans_iters, use_pallas)
 
     # representatives from the same sweep: per-slot argmin of own distance
     same = assign[:, None] == jnp.arange(ck)[None, :]
@@ -371,10 +397,10 @@ def select_metadata(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
 
     # empty-slot contract (matches ``representatives``): the admissible row
     # nearest the slot's centre. Computed unconditionally — on the jnp path
-    # the pairwise matrix is the same expression the final ``_lloyd_step``
-    # just evaluated, so XLA CSEs it to ~zero cost (a lax.cond would block
+    # the pairwise matrix is the same expression the last Lloyd sweep just
+    # evaluated, so XLA CSEs it to ~zero cost (a lax.cond would block
     # that, and under vmap both branches run anyway); the Pallas path pays
-    # one extra distance pass in kmeans_iters+2.
+    # one extra distance pass on top of the carried-sweep count.
     dfull = jnp.where(lmask <= 0.0,
                       _pairwise_sq_dists(feats, c, use_pallas), BIG)
     empty = sizes <= 0

@@ -3,7 +3,10 @@
 The simulator drives many FLClient objects in-process; the pod runtime maps
 cohorts of clients onto mesh shards instead (repro.core.distributed). A
 simple cost model estimates local wall-time so straggler behaviour (the
-paper's motivation) can be simulated and reported."""
+paper's motivation) can be simulated and reported — ``local_time`` is what
+``FLServer.straggler_mask`` compares against ``FLServer.deadline`` to drop
+stragglers from WeightAverage instead of waiting. Uploads are charged by
+``repro.fl.transport`` at exact encoded-frame bytes."""
 from __future__ import annotations
 
 from dataclasses import dataclass

@@ -1,9 +1,16 @@
 """Server role: client sampling, metadata aggregation + MetaTraining +
-ModelCompose + WeightAverage, deadline/straggler policy."""
+ModelCompose + WeightAverage, deadline/straggler policy.
+
+Downloads go through ``repro.fl.transport``: ``broadcast_weights`` charges
+the exact encoded WeightBroadcast frame (native dtypes — the old
+``size * 4`` billed bf16/int leaves as f32). ``deadline`` is the
+straggler policy: the simulation masks clients whose estimated local time
+exceeds it out of WeightAverage instead of waiting (``stragglers`` arg of
+``aggregate``)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -36,15 +43,38 @@ class FLServer:
         FORMED (so round 0's initial distribution is counted, and every
         broadcast is attributed to the cohort that actually received it —
         it used to be charged post-round against the next cohort's size).
-        Returns the bytes charged."""
-        nbytes = sum(a.size * 4 for a in jax.tree.leaves(self.global_params))
-        self.ledger.download("weights", nbytes * num_clients)
-        return nbytes * num_clients
+        Charged at the exact WeightBroadcast frame size per member; returns
+        the bytes charged."""
+        from repro.fl import transport as T
+        return T.broadcast_weights(self.ledger, self.global_params,
+                                   num_clients)
+
+    def straggler_mask(self, local_times: Sequence[float]) -> Optional[np.ndarray]:
+        """Deadline policy: True where a client's estimated local round
+        time blows ``deadline`` (the server will not wait for it). None
+        when the policy is off or nobody straggled — callers then take the
+        exact unweighted-average path. A round where EVERY client straggles
+        degenerates to waiting for all (dropping the whole cohort would
+        lose the round)."""
+        if self.deadline is None:
+            return None
+        late = np.asarray([t > self.deadline for t in local_times])
+        if not late.any() or late.all():
+            return None
+        return late
 
     def aggregate(self, client_params: List[PyTree], metadatas: List[tuple],
-                  key: jax.Array) -> RoundResult:
+                  key: jax.Array,
+                  stragglers: Optional[np.ndarray] = None) -> RoundResult:
+        """``stragglers`` (from ``straggler_mask``) zero-weights the marked
+        clients in Eq. 2 — their metadata still counts (Extract&Selection
+        is the cheap early phase; it is LocalUpdate that misses the
+        deadline)."""
+        weights = (None if stragglers is None
+                   else [0.0 if s else 1.0 for s in stragglers])
         res = server_round(self.model, self.global_params, self.upper_init,
-                           client_params, metadatas, self.cfg, key)
+                           client_params, metadatas, self.cfg, key,
+                           fedavg_weights=weights)
         self.global_params = res.global_params
         self.round_idx += 1
         return res

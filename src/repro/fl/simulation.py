@@ -35,6 +35,7 @@ class SimulationResult:
     metadata_counts: List[int] = field(default_factory=list)
     cohort_samples: List[int] = field(default_factory=list)  # sum_k |D_k| per round
     client_loss: List[float] = field(default_factory=list)
+    straggler_counts: List[int] = field(default_factory=list)  # dropped per round
     comm: dict = field(default_factory=dict)
     wall_time: float = 0.0
 
@@ -55,14 +56,19 @@ class FLSimulation:
     def __init__(self, model: SplitModel, clients: List[ClientData],
                  test: Dataset, cfg: FLConfig, seed: int = 0,
                  client_speeds: Optional[np.ndarray] = None,
-                 mesh=None):
+                 mesh=None, deadline: Optional[float] = None,
+                 flops_per_sample: float = 1e9):
         self.model, self.cfg, self.test = model, cfg, test
         self.mesh = mesh                 # 'data'-axis mesh for sharded selection
         key = jax.random.PRNGKey(seed)
         k_init, self.key = jax.random.split(key)
         params = model.init(k_init)
         _, upper0 = model.split(params)
-        self.server = FLServer(model, params, upper0, cfg)
+        # deadline: the ROADMAP straggler policy — clients whose estimated
+        # local time (FLClient.local_time under flops_per_sample) exceeds
+        # it are masked out of WeightAverage instead of waited for
+        self.server = FLServer(model, params, upper0, cfg, deadline=deadline)
+        self.flops_per_sample = flops_per_sample
         speeds = client_speeds if client_speeds is not None else np.ones(len(clients))
         self.clients = [FLClient(c, s) for c, s in zip(clients, speeds)]
         self.num_classes = test.num_classes
@@ -95,7 +101,14 @@ class FLSimulation:
             # the formed cohort downloads W_G(t-1) NOW (round 0 included)
             self.server.broadcast_weights(len(cohort))
             cparams, metas, losses = self._cohort_round(cohort, keys)
-            rr = self.server.aggregate(cparams, metas, k_server)
+            # deadline policy: estimated local times decide who the server
+            # stops waiting for (mask=None -> exact unweighted Eq. 2)
+            mask = self.server.straggler_mask(
+                [c.local_time(self.cfg, self.flops_per_sample)
+                 for c in cohort])
+            res.straggler_counts.append(0 if mask is None else int(mask.sum()))
+            rr = self.server.aggregate(cparams, metas, k_server,
+                                       stragglers=mask)
             res.client_loss.append(float(np.mean(losses)))
             res.metadata_counts.append(rr.metadata_count)
             res.cohort_samples.append(

@@ -1,0 +1,31 @@
+"""repro.fl.transport — the wire-format + codec subsystem every FL exchange
+flows through.
+
+Three layers:
+  ``messages``  typed frames (WeightBroadcast / SelectedKnowledge /
+                UpperUpdate) with an encode/decode round-trip contract
+  ``codecs``    raw_f32 / f16 / int8 tensor codecs (int8's quantize hot
+                path is the fused Pallas kernel in kernels/quantize.py)
+  ``channel``   ledger-charging helpers the round engines call — every
+                CommLedger entry is ``len(encode())``, byte-true
+
+See README.md's communication section for the wire layout and the measured
+bytes-per-round table (benchmarks/comm_bench.py -> BENCH_comms.json).
+"""
+from repro.fl.transport.channel import (broadcast_weights, knowledge_codec,
+                                        prequantize_cohort, upload_knowledge,
+                                        upload_knowledge_batched,
+                                        upload_update)
+from repro.fl.transport.codecs import (Int8Codec, Quantized, TensorCodec,
+                                       codec_by_code, get_codec)
+from repro.fl.transport.messages import (HEADER_BYTES, SelectedKnowledge,
+                                         UpperUpdate, WeightBroadcast,
+                                         pytree_frame_nbytes, unflatten_like)
+
+__all__ = [
+    "HEADER_BYTES", "Int8Codec", "Quantized", "SelectedKnowledge",
+    "TensorCodec", "UpperUpdate", "WeightBroadcast", "broadcast_weights",
+    "codec_by_code", "get_codec", "knowledge_codec", "prequantize_cohort",
+    "pytree_frame_nbytes", "unflatten_like", "upload_knowledge",
+    "upload_knowledge_batched", "upload_update",
+]

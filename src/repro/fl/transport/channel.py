@@ -1,0 +1,110 @@
+"""The charging surface between the round engines and the wire.
+
+``rounds.client_round``, ``distributed.cohort_round`` and
+``FLServer.broadcast_weights`` call these helpers instead of estimating
+sizes: every helper builds the real frame, charges the CommLedger with
+``len(wire)`` — the exact bytes — and hands back what the RECEIVER decodes,
+so a lossy codec's effect on MetaTraining is observable end to end, not
+just its byte count.
+
+``upload_knowledge_batched`` is the stacked-cohort entry: for the int8
+codec it runs ONE vmapped quantize over the gathered
+``(sel_acts, sel_y, valid)`` triple (the Pallas kernel or its oracle —
+bit-identical), then frames each client's bytes from the pre-quantized
+levels; the per-client and batched encodings produce identical wire bytes,
+which is what keeps the sequential and distributed simulator paths
+ledger-equal.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.comms import CommLedger
+from repro.fl.transport.codecs import (Int8Codec, Quantized, TensorCodec,
+                                       get_codec)
+from repro.fl.transport.messages import SelectedKnowledge, pytree_frame_nbytes
+
+PyTree = Any
+
+
+def broadcast_weights(ledger: CommLedger, params: PyTree,
+                      num_clients: int) -> int:
+    """server -> cohort: one WeightBroadcast frame per member, charged at
+    its exact encoded size (native dtypes — a bf16 model costs half an f32
+    model, where the old ``size * 4`` billed both the same). The length is
+    computed from leaf shapes/dtypes (``pytree_frame_nbytes`` ==
+    ``len(encode())``) — the simulator's receiver reads the in-memory
+    params, so serializing the full model just to measure it would be a
+    per-round device->host copy for nothing."""
+    nbytes = pytree_frame_nbytes(params)
+    ledger.download("weights", nbytes * num_clients, frames=num_clients)
+    return nbytes * num_clients
+
+
+def upload_update(ledger: CommLedger, params: PyTree) -> int:
+    """client -> server: the UpperUpdate frame for Eq. 2. Returns bytes
+    (shape/dtype-computed, same rationale as ``broadcast_weights``)."""
+    nbytes = pytree_frame_nbytes(params)
+    ledger.upload("weights", nbytes)
+    return nbytes
+
+
+def upload_knowledge(ledger: CommLedger, acts, labels, valid,
+                     codec: TensorCodec,
+                     pre: Optional[Quantized] = None) -> Tuple:
+    """client -> server: encode the selection triple, charge the exact
+    frame bytes, and return what the server DECODES from the wire
+    (valid rows only, dequantized f32) — the metadata MetaTraining sees."""
+    wire = SelectedKnowledge(acts, labels, valid, codec, pre=pre).encode()
+    ledger.upload("metadata", len(wire))
+    return SelectedKnowledge.decode(wire)
+
+
+def prequantize_cohort(codec: TensorCodec, sel_acts: jnp.ndarray,
+                       valid: jnp.ndarray) -> Optional[List[Quantized]]:
+    """One compiled (vmappable) quantize over a stacked cohort's gathered
+    triple: (B, CK, ...) acts + (B, CK) valid -> per-client Quantized, or
+    None for codecs with no quantize stage. Per-client statistics are
+    reductions over each client's own rows, so the vmapped result is
+    bit-identical to B separate quantizes — same wire bytes either way."""
+    if not isinstance(codec, Int8Codec):
+        return None
+    b, ck = sel_acts.shape[0], sel_acts.shape[1]
+    flat = jnp.reshape(sel_acts, (b, ck, -1)).astype(jnp.float32)
+    m = jnp.asarray(valid).astype(bool)
+    if codec.use_pallas:
+        from repro.kernels.ops import quantize_affine
+        q, xmin, scale = jax.vmap(quantize_affine)(flat, m)
+    else:
+        from repro.kernels.ref import quantize_affine_ref
+        q, xmin, scale = jax.vmap(quantize_affine_ref)(flat, m)
+    q, xmin, scale = np.asarray(q), np.asarray(xmin), np.asarray(scale)
+    return [Quantized(q[i], float(xmin[i]), float(scale[i]))
+            for i in range(b)]
+
+
+def upload_knowledge_batched(ledger: CommLedger, sel_acts, sel_ys, valid,
+                             codec: TensorCodec) -> List[Tuple]:
+    """Stacked-cohort knowledge upload: encode every client's frame (int8
+    quantize runs once, vmapped, over the whole stack), charge each frame's
+    exact bytes, and return the per-client decoded triples."""
+    pres = prequantize_cohort(codec, jnp.asarray(sel_acts),
+                              jnp.asarray(valid))
+    out = []
+    for i in range(np.asarray(valid).shape[0]):
+        out.append(upload_knowledge(
+            ledger, sel_acts[i], sel_ys[i], valid[i], codec,
+            pre=None if pres is None else pres[i]))
+    return out
+
+
+def knowledge_codec(cfg) -> TensorCodec:
+    """The codec an FLConfig asks for (``transport_codec`` knob; the Pallas
+    quantize engine rides the same ``use_pallas_selection`` switch as the
+    selection kernels — one hot-path toggle for the whole client side)."""
+    return get_codec(cfg.transport_codec,
+                     use_pallas=cfg.use_pallas_selection)

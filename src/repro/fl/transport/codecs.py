@@ -1,0 +1,141 @@
+"""Tensor codecs for the wire: how a float payload becomes bytes.
+
+A codec owns the LOSSY part of the transport layer — turning the selected
+activation maps (the paper's 'knowledge') into a wire dtype — while
+``messages.py`` owns the lossless framing around it. Three codecs:
+
+  raw_f32   4 bytes/element, exact (the paper's implicit accounting)
+  f16       2 bytes/element, IEEE half round-trip
+  int8      1 byte/element + 8 bytes of per-tensor affine params
+            (xmin, scale), quantized by the fused Pallas kernel
+            (``kernels/quantize.py``) or its jnp oracle — bit-identical
+            either way, and vmappable so the distributed engine encodes a
+            whole stacked cohort inside one compiled computation.
+
+``encode`` consumes the FULL fixed-slot tensor plus the valid mask (the
+int8 statistics must see exactly the rows that will cross the wire;
+empty-cluster slots are masked out of them), and returns the wire buffer
+for the valid rows only plus the codec's parameter bytes. ``decode``
+reconstructs those rows as f32. Codec choice changes bytes-per-round and
+(for lossy codecs) what the server's MetaTraining actually sees — both ends
+of the paper's accuracy-vs-communication trade.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Type
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+
+
+@dataclass(frozen=True)
+class Quantized:
+    """A tensor already through the quantize hot path (possibly inside a
+    vmapped computation): the int8 levels plus the affine params."""
+    q: np.ndarray          # (N, D) int8, masked rows = -128
+    xmin: float
+    scale: float
+
+
+class TensorCodec:
+    """encode: (x (N, D) f32, valid (N,) bool) -> (payload bytes for the
+    VALID rows, params bytes). decode: inverse, -> (nvalid, D) f32.
+    When a ``pre``-quantized payload is supplied, ``x`` may be None — the
+    framing layer skips the host copy the codec would never read."""
+    name: str = ""
+    code: int = -1
+
+    def encode(self, x: np.ndarray, valid: np.ndarray,
+               pre: Optional[Quantized] = None) -> Tuple[bytes, bytes]:
+        raise NotImplementedError
+
+    def decode(self, payload: bytes, nvalid: int, d: int,
+               params: bytes) -> np.ndarray:
+        raise NotImplementedError
+
+
+class RawF32Codec(TensorCodec):
+    name, code = "raw_f32", 0
+
+    def encode(self, x, valid, pre=None):
+        return np.ascontiguousarray(
+            x[valid].astype(np.float32)).tobytes(), b""
+
+    def decode(self, payload, nvalid, d, params):
+        return np.frombuffer(payload, np.float32).reshape(nvalid, d).copy()
+
+
+class F16Codec(TensorCodec):
+    name, code = "f16", 1
+
+    def encode(self, x, valid, pre=None):
+        return np.ascontiguousarray(
+            x[valid].astype(np.float16)).tobytes(), b""
+
+    def decode(self, payload, nvalid, d, params):
+        half = np.frombuffer(payload, np.float16).reshape(nvalid, d)
+        return half.astype(np.float32)
+
+
+class Int8Codec(TensorCodec):
+    """Per-tensor affine int8: q = clip(round((x - xmin) * (1/scale)) - 128)
+    with (xmin, scale) over the valid rows (``kernels/ref.py`` is the exact
+    contract). ``use_pallas`` routes the quantize through the fused Pallas
+    kernel; the jnp oracle is bit-identical, so the wire bytes do not depend
+    on the engine. A pre-quantized ``Quantized`` (from the batched cohort
+    path) skips the per-client quantize entirely."""
+    name, code = "int8", 2
+
+    def __init__(self, use_pallas: bool = False):
+        self.use_pallas = use_pallas
+
+    def quantize(self, x, valid) -> Quantized:
+        x2 = jnp.asarray(np.ascontiguousarray(x, np.float32))
+        m = jnp.asarray(np.ascontiguousarray(valid, bool))
+        if self.use_pallas:
+            from repro.kernels.ops import quantize_affine
+            q, xmin, scale = quantize_affine(x2, m)
+        else:
+            q, xmin, scale = kref.quantize_affine_ref(x2, m)
+        return Quantized(np.asarray(q), float(xmin), float(scale))
+
+    def encode(self, x, valid, pre=None):
+        z = pre if pre is not None else self.quantize(x, valid)
+        params = struct.pack("<ff", z.xmin, z.scale)
+        return np.ascontiguousarray(z.q[valid]).tobytes(), params
+
+    def decode(self, payload, nvalid, d, params):
+        xmin, scale = struct.unpack("<ff", params)
+        q = np.frombuffer(payload, np.int8).reshape(nvalid, d)
+        # the dequant contract (kernels/ref.py): x_hat = (q+128)*scale+xmin,
+        # in f32 end to end so every consumer reconstructs identical values
+        return ((q.astype(np.float32) + np.float32(128.0))
+                * np.float32(scale) + np.float32(xmin))
+
+
+_CODECS: Dict[str, Type[TensorCodec]] = {
+    c.name: c for c in (RawF32Codec, F16Codec, Int8Codec)}
+_BY_CODE: Dict[int, Type[TensorCodec]] = {
+    c.code: c for c in (RawF32Codec, F16Codec, Int8Codec)}
+
+
+def get_codec(name: str, use_pallas: bool = False) -> TensorCodec:
+    """Codec registry keyed by ``FLConfig.transport_codec``."""
+    if name not in _CODECS:
+        raise ValueError(
+            f"unknown transport codec {name!r} (have {sorted(_CODECS)})")
+    if name == "int8":
+        return Int8Codec(use_pallas=use_pallas)
+    return _CODECS[name]()
+
+
+def codec_by_code(code: int) -> TensorCodec:
+    """Wire-id -> codec (decode side; the frame header names the codec, so
+    a receiver never needs out-of-band codec config)."""
+    if code not in _BY_CODE:
+        raise ValueError(f"unknown codec wire id {code}")
+    return _BY_CODE[code]()

@@ -1,0 +1,261 @@
+"""Typed wire messages: the three payloads Algorithm 1 actually exchanges.
+
+Every exchange in the split-FL round is one of:
+
+  WeightBroadcast    server -> client   W_G(t-1), one frame per cohort member
+  SelectedKnowledge  client -> server   the Extract&Selection output — the
+                                        selected activation maps + labels +
+                                        per-slot validity (the paper's
+                                        metadata D_M_k, the payload its
+                                        ~1.6% claim is about)
+  UpperUpdate        client -> server   the client's updated weights for
+                                        WeightAverage (Eq. 2)
+
+Each message has an ``encode() -> bytes`` / ``decode(wire)`` round-trip
+contract, and the CommLedger is charged ``len(encode())`` — the byte-true
+replacement for the old ``size * 4`` estimates (which miscounted every
+non-f32 payload and ignored framing entirely).
+
+Frame layout (little-endian):
+
+  0   4  magic  b"FLTP"
+  4   1  version
+  5   1  msg type
+  6   1  codec wire id (knowledge frames; 0 for weight frames)
+  7   1  reserved
+  8   4  payload length
+  12  …  payload
+
+Weight payloads are a leaf count followed by array blocks
+(dtype u8 | ndim u8 | dims u32* | raw bytes) in tree-flatten order — the
+model ARCHITECTURE is common knowledge between server and clients, so only
+numbers cross the wire and ``unflatten_like`` restores the pytree.
+
+Knowledge payloads carry the VALID slots only: slot count, valid count, the
+per-map shape, a packed validity bitmap, the labels, the codec's parameter
+block, then the codec-encoded rows. Empty-cluster slots cost one BIT each,
+and a client whose selection came back all-invalid sends a 23-byte frame
+instead of a full metadata tensor.
+"""
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.transport.codecs import (Quantized, TensorCodec, codec_by_code,
+                                       get_codec)
+
+MAGIC = b"FLTP"
+VERSION = 1
+
+MSG_WEIGHT_BROADCAST = 1
+MSG_SELECTED_KNOWLEDGE = 2
+MSG_UPPER_UPDATE = 3
+
+_HEADER = struct.Struct("<4sBBBBI")
+HEADER_BYTES = _HEADER.size                    # 12
+
+_DTYPES: List[np.dtype] = [
+    np.dtype(np.float32), np.dtype(np.float16), np.dtype(jnp.bfloat16),
+    np.dtype(np.int8), np.dtype(np.uint8), np.dtype(np.int32),
+    np.dtype(np.int64), np.dtype(np.uint32), np.dtype(np.bool_),
+]
+_DTYPE_CODE = {dt: i for i, dt in enumerate(_DTYPES)}
+
+
+def _dtype_code(dt) -> int:
+    dt = np.dtype(dt)
+    if dt not in _DTYPE_CODE:
+        raise ValueError(f"no wire code for dtype {dt}")
+    return _DTYPE_CODE[dt]
+
+
+def _pack_header(msg_type: int, codec_code: int, payload: bytes) -> bytes:
+    return _HEADER.pack(MAGIC, VERSION, msg_type, codec_code, 0,
+                        len(payload)) + payload
+
+
+def _unpack_header(wire: bytes) -> Tuple[int, int, bytes]:
+    magic, ver, msg_type, codec_code, _, plen = _HEADER.unpack_from(wire, 0)
+    if magic != MAGIC:
+        raise ValueError(f"bad frame magic {magic!r}")
+    if ver != VERSION:
+        raise ValueError(f"unsupported frame version {ver}")
+    payload = wire[HEADER_BYTES:]
+    if len(payload) != plen:
+        raise ValueError(f"frame length mismatch: {len(payload)} != {plen}")
+    return msg_type, codec_code, payload
+
+
+def _pack_array(a: np.ndarray) -> bytes:
+    # tobytes() is C-order regardless of layout; no ascontiguousarray —
+    # it would promote 0-d leaves to (1,) and break their round-trip
+    head = struct.pack("<BB", _dtype_code(a.dtype), a.ndim)
+    dims = struct.pack(f"<{a.ndim}I", *a.shape) if a.ndim else b""
+    return head + dims + a.tobytes()
+
+
+def _unpack_array(buf: bytes, off: int) -> Tuple[np.ndarray, int]:
+    code, ndim = struct.unpack_from("<BB", buf, off)
+    off += 2
+    shape = struct.unpack_from(f"<{ndim}I", buf, off) if ndim else ()
+    off += 4 * ndim
+    dt = _DTYPES[code]
+    n = int(np.prod(shape, dtype=np.int64)) if ndim else 1
+    a = np.frombuffer(buf, dt, count=n, offset=off).reshape(shape).copy()
+    return a, off + n * dt.itemsize
+
+
+def _encode_pytree(msg_type: int, tree: Any) -> bytes:
+    leaves = [np.asarray(x) for x in jax.tree.leaves(tree)]
+    payload = struct.pack("<I", len(leaves)) + b"".join(
+        _pack_array(a) for a in leaves)
+    return _pack_header(msg_type, 0, payload)
+
+
+def _decode_pytree(wire: bytes, expect_type: int) -> List[np.ndarray]:
+    msg_type, _, payload = _unpack_header(wire)
+    if msg_type != expect_type:
+        raise ValueError(f"expected msg type {expect_type}, got {msg_type}")
+    (n,) = struct.unpack_from("<I", payload, 0)
+    off, leaves = 4, []
+    for _ in range(n):
+        a, off = _unpack_array(payload, off)
+        leaves.append(a)
+    return leaves
+
+
+def pytree_frame_nbytes(tree: Any) -> int:
+    """Exact byte length of the WeightBroadcast/UpperUpdate frame for
+    ``tree`` WITHOUT serializing it: the frame is a pure function of leaf
+    shapes/dtypes (header + leaf count + per-leaf dtype/ndim/dims head +
+    raw bytes), so ledger charging needs no device->host copy of the
+    weights. Kept equal to ``len(_encode_pytree(...))`` by construction
+    (asserted in tests/test_transport.py)."""
+    total = HEADER_BYTES + 4
+    for a in jax.tree.leaves(tree):
+        if not hasattr(a, "ndim") or not hasattr(a, "dtype"):
+            a = np.asarray(a)
+        _dtype_code(a.dtype)             # same unknown-dtype error as encode
+        total += 2 + 4 * a.ndim + int(a.size) * np.dtype(a.dtype).itemsize
+    return total
+
+
+def unflatten_like(tree: Any, leaves: List[np.ndarray]) -> Any:
+    """Rebuild a decoded weight payload into ``tree``'s structure (the
+    architecture is shared out-of-band; the wire carries numbers only)."""
+    return jax.tree.unflatten(jax.tree.structure(tree),
+                              [jnp.asarray(a) for a in leaves])
+
+
+@dataclass
+class WeightBroadcast:
+    """server -> client: the global model W_G(t-1) the cohort trains from."""
+    params: Any
+
+    MSG_TYPE = MSG_WEIGHT_BROADCAST
+
+    def encode(self) -> bytes:
+        return _encode_pytree(self.MSG_TYPE, self.params)
+
+    @classmethod
+    def decode(cls, wire: bytes) -> List[np.ndarray]:
+        return _decode_pytree(wire, cls.MSG_TYPE)
+
+
+@dataclass
+class UpperUpdate:
+    """client -> server: the locally-updated weights entering Eq. 2.
+    (On the split network the lower part is what FedAvg really shares; the
+    simulator ships the client's full updated tree, and this frame charges
+    exactly those bytes.)"""
+    params: Any
+
+    MSG_TYPE = MSG_UPPER_UPDATE
+
+    def encode(self) -> bytes:
+        return _encode_pytree(self.MSG_TYPE, self.params)
+
+    @classmethod
+    def decode(cls, wire: bytes) -> List[np.ndarray]:
+        return _decode_pytree(wire, cls.MSG_TYPE)
+
+
+@dataclass
+class SelectedKnowledge:
+    """client -> server: the §3.1 selection output. ``acts`` is the fixed
+    ``num_classes*clusters_per_class``-slot tensor, ``valid`` marks the
+    non-empty-cluster slots; only valid rows are encoded. ``pre`` is an
+    optional pre-quantized payload from the batched cohort encoder (the
+    per-client quantize is then skipped — same bytes either way)."""
+    acts: Any                                  # (CK, *map_shape)
+    labels: Any                                # (CK,) int
+    valid: Any                                 # (CK,) bool
+    codec: TensorCodec = field(default_factory=lambda: get_codec("raw_f32"))
+    pre: Optional[Quantized] = None
+
+    MSG_TYPE = MSG_SELECTED_KNOWLEDGE
+
+    def encode(self) -> bytes:
+        labels = np.asarray(self.labels)
+        valid = np.asarray(self.valid).astype(bool)
+        shape = tuple(self.acts.shape)
+        ck, map_shape = shape[0], shape[1:]
+        # with a pre-quantized payload the codec never reads the floats —
+        # don't device->host copy the full fixed-slot tensor just to
+        # discard it (shape/labels/valid are all the framing needs)
+        flat = (None if self.pre is not None
+                else np.asarray(self.acts).reshape(ck, -1).astype(np.float32))
+        payload_rows, params = self.codec.encode(flat, valid, pre=self.pre)
+        head = struct.pack("<IIB", ck, int(valid.sum()), len(map_shape))
+        head += struct.pack(f"<{len(map_shape)}I", *map_shape)
+        head += struct.pack("<B", _dtype_code(labels.dtype))
+        head += np.packbits(valid).tobytes()
+        head += struct.pack("<H", len(params)) + params
+        head += np.ascontiguousarray(labels[valid]).tobytes()
+        return _pack_header(self.MSG_TYPE, self.codec.code,
+                            head + payload_rows)
+
+    @classmethod
+    def decode(cls, wire: bytes):
+        """-> (acts (nvalid, *map_shape) f32, labels (nvalid,), valid
+        (nvalid,) all-True), as jnp arrays: exactly what the server
+        received, ready for MetaTraining. (The invalid slots never crossed
+        the wire, so the reconstruction is the valid rows — the server
+        trains on what arrived, which also keeps junk slots out of the
+        upper model's batch statistics.)"""
+        msg_type, codec_code, payload = _unpack_header(wire)
+        if msg_type != cls.MSG_TYPE:
+            raise ValueError(f"expected SelectedKnowledge, got {msg_type}")
+        codec = codec_by_code(codec_code)
+        ck, nvalid, ndim = struct.unpack_from("<IIB", payload, 0)
+        off = 9
+        map_shape = struct.unpack_from(f"<{ndim}I", payload, off)
+        off += 4 * ndim
+        (lab_code,) = struct.unpack_from("<B", payload, off)
+        off += 1
+        nbitmap = (ck + 7) // 8
+        valid = np.unpackbits(
+            np.frombuffer(payload, np.uint8, nbitmap, off),
+            count=ck).astype(bool)
+        off += nbitmap
+        if int(valid.sum()) != nvalid:   # before nvalid slices labels/rows
+            raise ValueError(
+                f"frame bitmap popcount {int(valid.sum())} != {nvalid}")
+        (nparams,) = struct.unpack_from("<H", payload, off)
+        off += 2
+        params = payload[off:off + nparams]
+        off += nparams
+        lab_dt = _DTYPES[lab_code]
+        labels = np.frombuffer(payload, lab_dt, nvalid, off).copy()
+        off += nvalid * lab_dt.itemsize
+        d = int(np.prod(map_shape, dtype=np.int64)) if ndim else 1
+        rows = codec.decode(payload[off:], nvalid, d, params)
+        acts = rows.reshape((nvalid,) + tuple(map_shape))
+        return (jnp.asarray(acts), jnp.asarray(labels),
+                jnp.ones((nvalid,), bool))

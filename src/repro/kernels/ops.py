@@ -12,6 +12,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
 from repro.kernels.kmeans import kmeans_lloyd_kernel, kmeans_pairwise_dist_kernel
+from repro.kernels.quantize import quantize_affine_kernel
 
 
 def _interpret() -> bool:
@@ -63,6 +64,29 @@ def kmeans_lloyd_step(x: jnp.ndarray, c: jnp.ndarray, lmask: jnp.ndarray,
     assign, mind, sums, counts = kmeans_lloyd_kernel(
         xp, cp, lp, block_n=block_n, interpret=_interpret())
     return assign[:n], mind[:n], sums[:k, :d], counts[0, :k]
+
+
+def quantize_affine(x: jnp.ndarray, rowmask: jnp.ndarray,
+                    block_n: int = 256):
+    """Per-tensor affine int8 quantization of (N, D) x with (N,) row mask
+    (the transport codec's pack hot path). Pads N to block_n and D to lane
+    width 128; padded rows are masked out of the statistics and padded
+    columns are guarded by the kernel's static d_true, so padding is
+    correctness-free. Returns (q (N, D) int8, xmin f32, scale f32) exactly
+    matching ``ref.quantize_affine_ref`` bit-for-bit (vmappable across a
+    stacked cohort — the batch axis becomes the outermost grid dim)."""
+    n, d = x.shape
+    if n < 64:   # tiny payloads: the jnp path beats kernel dispatch
+        return ref.quantize_affine_ref(x, rowmask)
+    npad = _pad_to(n, block_n)
+    dpad = _pad_to(d, 128)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, npad - n), (0, dpad - d)))
+    mp = jnp.pad(rowmask.astype(jnp.float32), (0, npad - n))
+    mp = jnp.broadcast_to(mp[:, None], (npad, 128))
+    q, mm = quantize_affine_kernel(xp, mp, d_true=d, block_n=block_n,
+                                   interpret=_interpret())
+    xmin, scale = ref.affine_params_from_minmax(mm[0, 0], mm[1, 0])
+    return q[:n, :d], xmin, scale
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

@@ -37,6 +37,63 @@ def kmeans_lloyd_ref(x: jnp.ndarray, c: jnp.ndarray, lmask: jnp.ndarray):
     return assign, mind, sums, counts
 
 
+def quantize_affine_ref(x: jnp.ndarray, rowmask: jnp.ndarray):
+    """Oracle for the fused per-tensor affine int8 quantizer
+    (kernels/quantize.py) — the transport layer's SelectedKnowledge pack
+    hot path.
+
+    x: (N, D) f32, rowmask: (N,) bool/0-1 — statistics (min/max) run over
+    VALID rows only; masked rows quantize to -128 deterministically (their
+    values never cross the wire — the codec packs valid rows only — but the
+    kernel/oracle bit-for-bit contract covers them).
+
+    Returns (q (N, D) int8, xmin f32 scalar, scale f32 scalar) with the
+    dequantization contract ``x_hat = (q + 128) * scale + xmin``:
+      * scale = (xmax - xmin) / 255 over valid rows
+      * constant tensors (xmax == xmin) use scale=1 -> q = -128 everywhere
+        and x_hat == xmin EXACTLY
+      * an all-masked payload yields xmin=0, scale=1 (nothing to transmit,
+        but the params stay finite for framing)
+    Every step is elementwise f32 or an exact min/max reduction, so the
+    Pallas kernel reproduces it bit-for-bit at any block size."""
+    valid = rowmask.astype(bool)[:, None]
+    xmin_raw = jnp.min(jnp.where(valid, x, BIG))
+    xmax_raw = jnp.max(jnp.where(valid, x, -BIG))
+    xmin, scale = affine_params_from_minmax(xmin_raw, xmax_raw)
+    # multiply by the reciprocal EXPLICITLY: XLA strength-reduces a
+    # vector/scalar division to a reciprocal multiply in some fusions but
+    # not others, which would cost the kernel/oracle bit-identity at
+    # round-half boundaries; one scalar reciprocal is deterministic
+    q = jnp.clip(jnp.round((x - xmin) * (1.0 / scale)) - 128.0,
+                 -128.0, 127.0)
+    q = jnp.where(valid, q, -128.0).astype(jnp.int8)
+    return q, xmin, scale
+
+
+def affine_params_from_minmax(xmin_raw, xmax_raw):
+    """(raw masked min, raw masked max) -> (xmin, scale) of the affine int8
+    contract. Shared by the oracle, the Pallas kernel's quantize phase, and
+    the ops wrapper (which receives the kernel's raw accumulators), so all
+    three compute the identical f32 expression."""
+    has = xmax_raw >= xmin_raw
+    xmin = jnp.where(has, xmin_raw, 0.0).astype(jnp.float32)
+    rng = jnp.where(has, xmax_raw - xmin, 0.0)
+    # an explicit multiply, NOT rng/255: XLA strength-reduces division by a
+    # constant to a reciprocal multiply only in some compilation contexts
+    # (fused jit vs eager vs interpret), which would let the same payload
+    # produce two different scales — and two different wire encodings
+    scale = jnp.where(rng > 0, rng * jnp.float32(1.0 / 255.0),
+                      1.0).astype(jnp.float32)
+    return xmin, scale
+
+
+def dequantize_affine_ref(q: jnp.ndarray, xmin, scale) -> jnp.ndarray:
+    """Inverse of ``quantize_affine_ref``: x_hat = (q + 128) * scale + xmin
+    (f32). |x_hat - x| <= scale/2 for every valid row element."""
+    return (q.astype(jnp.float32) + 128.0) * jnp.float32(scale) \
+        + jnp.float32(xmin)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """(B,S,H,D) x (B,S,KV,D)^2 -> (B,S,H,D); GQA via head repeat."""
     b, sq, h, d = q.shape

@@ -1,10 +1,13 @@
 """Regression tests for the simulator's accounting: the selected-fraction
-denominator under partial participation, and the weight-broadcast download
-ledger (charged when the cohort is formed, not post-round). Plus the
-simulator-level equality of the stacked (distributed) cohort path."""
+denominator under partial participation, the weight-broadcast download
+ledger (charged when the cohort is formed, not post-round — and at the
+exact WeightBroadcast frame size, native dtypes included), and the
+deadline/straggler policy. Plus the simulator-level equality of the
+stacked (distributed) cohort path."""
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -12,6 +15,7 @@ from repro.configs import FLConfig, get_wrn_config
 from repro.data import SyntheticImageDataset, partition_k_shards
 from repro.fl.server import FLServer
 from repro.fl.simulation import FLSimulation
+from repro.fl.transport import WeightBroadcast
 from repro.models.wrn import make_split_wrn
 
 
@@ -69,13 +73,15 @@ class TestDownloadLedger:
         round 0's initial distribution was never counted and each broadcast
         was attributed to the wrong cohort size). Discriminates the pre-fix
         semantics by aggregating FEWER client params (2) than the formed
-        cohort (3): the ledger must show exactly the formation-time charge."""
+        cohort (3): the ledger must show exactly the formation-time charge
+        — which since the transport layer is the exact WeightBroadcast
+        frame size, not a ``size * 4`` estimate."""
         model, clients, test = setting
         cfg = _flcfg(meta_epochs=1)
         params = model.init(jax.random.PRNGKey(0))
         _, upper0 = model.split(params)
         server = FLServer(model, params, upper0, cfg)
-        nbytes = sum(a.size * 4 for a in jax.tree.leaves(params))
+        nbytes = len(WeightBroadcast(params).encode())
 
         charged = server.broadcast_weights(3)
         assert charged == 3 * nbytes
@@ -107,10 +113,95 @@ class TestDownloadLedger:
         model, clients, test = setting
         sim = FLSimulation(model, clients, test,
                            _flcfg(clients_per_round=2), seed=0)
-        nbytes = sum(a.size * 4
-                     for a in jax.tree.leaves(sim.server.global_params))
+        nbytes = len(WeightBroadcast(sim.server.global_params).encode())
         res = sim.run(rounds=1)
         assert res.comm["down"]["weights"] == 2 * nbytes
+
+    def test_non_f32_params_charged_at_itemsize(self, setting):
+        """Regression for the ``size * 4`` estimate: a bf16 model must be
+        billed 2 bytes/element (+ framing), not as f32. Pre-fix,
+        ``broadcast_weights`` charged exactly ``4 * size`` per client for
+        ANY dtype — this asserts the charge tracks dtype itemsize."""
+        model, _, _ = setting
+        cfg = _flcfg()
+        params = model.init(jax.random.PRNGKey(0))
+        p16 = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params)
+        _, upper0 = model.split(p16)
+        server = FLServer(model, p16, upper0, cfg)
+        charged = server.broadcast_weights(1)
+        size = sum(a.size for a in jax.tree.leaves(p16))
+        nbytes = sum(a.size * a.dtype.itemsize
+                     for a in jax.tree.leaves(p16))
+        # exact frame accounting: payload is itemsize-true ...
+        assert charged == len(WeightBroadcast(p16).encode())
+        assert nbytes <= charged < nbytes + size  # framing є o(payload)
+        # ... and the pre-fix f32 estimate overbills bf16 by ~2x
+        assert charged < size * 4
+
+
+class TestStragglerDeadline:
+    """ROADMAP deadline policy: clients whose estimated local time exceeds
+    ``FLServer.deadline`` are masked out of WeightAverage instead of
+    waited for — and the policy is bit-identical to no-deadline when
+    nobody straggles."""
+
+    def test_straggler_masked_out_of_fedavg(self, setting):
+        model, clients, test = setting
+        cfg = _flcfg()
+        speeds = np.array([1.0, 1.0, 1.0, 1e-4])  # client 3 is ~10^4x slower
+        sim = FLSimulation(model, clients, test, cfg, seed=0,
+                           client_speeds=speeds, deadline=1e3)
+        times = [c.local_time(cfg, sim.flops_per_sample)
+                 for c in sim.clients]
+        assert max(times[:3]) <= 1e3 < times[3]
+        res = sim.run(rounds=1)
+        assert res.straggler_counts == [1]
+
+        # the straggler's update must NOT have entered Eq. 2: replay round
+        # 0's exact sampling + key derivation on a fresh same-seed sim and
+        # compare against the mean of the ON-TIME clients' params only
+        sim2 = FLSimulation(model, clients, test, cfg, seed=0,
+                            client_speeds=speeds)
+        _, k_round, k_sample = jax.random.split(sim2.key, 3)
+        idx = sim2.server.sample_clients(len(sim2.clients), k_sample)
+        keys = jax.random.split(k_round, len(idx))
+        cohort = [sim2.clients[int(i)] for i in idx]
+        from repro.core.rounds import run_cohort
+        cparams, _, _ = run_cohort(
+            model, sim2.server.global_params,
+            [c.client for c in cohort], cfg, keys,
+            sim2.server.ledger, sim2.num_classes)
+        from repro.core import fedavg as fa
+        cohort_times = [times[int(i)] for i in idx]
+        expected = fa.weight_average(
+            [p for p, t in zip(cparams, cohort_times) if t <= 1e3])
+        got = sim.server.global_params
+        for a, b in zip(jax.tree.leaves(expected), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_no_straggler_bitident_to_no_deadline(self, setting):
+        model, clients, test = setting
+        cfg = _flcfg()
+        r_none = FLSimulation(model, clients, test, cfg, seed=0).run(rounds=2)
+        r_dl = FLSimulation(model, clients, test, cfg, seed=0,
+                            deadline=1e12).run(rounds=2)
+        assert r_dl.straggler_counts == [0, 0]
+        assert r_dl.client_loss == r_none.client_loss
+        assert r_dl.test_acc == r_none.test_acc
+        assert r_dl.fedavg_acc == r_none.fedavg_acc
+        assert r_dl.comm == r_none.comm
+
+    def test_all_stragglers_degenerates_to_waiting(self, setting):
+        """If EVERY client misses the deadline the server cannot drop the
+        cohort — the policy degenerates to waiting for all (exact
+        unweighted Eq. 2)."""
+        model, clients, test = setting
+        cfg = _flcfg()
+        r_none = FLSimulation(model, clients, test, cfg, seed=0).run(rounds=1)
+        r_all = FLSimulation(model, clients, test, cfg, seed=0,
+                             deadline=1e-9).run(rounds=1)
+        assert r_all.straggler_counts == [0]
+        assert r_all.fedavg_acc == r_none.fedavg_acc
 
 
 class TestDistributedSimulatorEquality:

@@ -358,3 +358,56 @@ def test_property_pca_projection_shrinks(n, d, p, seed):
     assert (np.diff(ev) <= 1e-3).all()
     z = pca_transform(st_, x)
     assert np.isfinite(np.asarray(z)).all()
+
+
+class TestLloydCarriedStats:
+    """The post-loop Lloyd sweep is gone: ``_lloyd_iterate`` carries
+    (assign, mindist, sums, counts) through the while_loop and only
+    recomputes (lax.cond) on a cap exit — both exits must be bit-identical
+    to a fresh ``_lloyd_step`` at the returned centroids."""
+
+    def _problem(self, seed=0, n=120, d=6, k=5):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        lmask = jnp.where(jnp.asarray(rng.random((n, k)) < 0.1), 1e30,
+                          0.0).astype(jnp.float32)
+        from repro.core.selection import kmeans_init
+        c0 = kmeans_init(x, k, KEY)
+        return x, c0, lmask
+
+    @pytest.mark.parametrize("iters", [0, 1, 2, 100])
+    def test_carried_stats_equal_recompute(self, iters):
+        """iters in {0, 1, 2} force cap exits (including the degenerate
+        never-ran loop); iters=100 converges and exits early — every case
+        must hand back exactly the stats of a final-sweep recompute."""
+        from repro.core.selection import _lloyd_iterate, _lloyd_step
+        x, c0, lmask = self._problem()
+        c, stats = _lloyd_iterate(x, c0, lmask, iters, False)
+        want = _lloyd_step(x, c, lmask, False)
+        for got, ref_ in zip(stats, want):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref_))
+
+    def test_kmeans_non_f32_dtype_traces(self):
+        """Regression: the carry's stats0 once hardcoded f32 for mindist/
+        counts, so a bf16 feature matrix (which _lloyd_step returns in
+        x.dtype) crashed the while_loop with a carry-type mismatch."""
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(size=(40, 4)), jnp.bfloat16)
+        km = kmeans(x, 3, KEY, iters=5)
+        assert km.assignment.shape == (40,)
+        assert km.distances.dtype == jnp.bfloat16
+
+    def test_kmeans_state_unchanged_by_carry(self):
+        """kmeans() (which now consumes the carried stats) returns the
+        same state as recomputing each field from its centroids."""
+        from repro.core.selection import _lloyd_step
+        x, _, _ = self._problem(seed=3)
+        km = kmeans(x, 4, KEY, iters=25)
+        lmask = jnp.zeros((x.shape[0], 4), jnp.float32)
+        assign, own, _, sizes = _lloyd_step(x, km.centroids, lmask, False)
+        np.testing.assert_array_equal(np.asarray(km.assignment),
+                                      np.asarray(assign))
+        np.testing.assert_array_equal(np.asarray(km.distances),
+                                      np.asarray(own))
+        np.testing.assert_array_equal(np.asarray(km.cluster_sizes),
+                                      np.asarray(sizes))

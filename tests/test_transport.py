@@ -1,0 +1,296 @@
+"""repro.fl.transport: codec round-trip property tests, the Pallas
+quantize kernel vs its oracle (masked rows, non-aligned shapes, vmap), and
+ledger byte-exactness — every CommLedger entry of a full simulated round
+equals the exact byte length of the encoded messages, on both the
+sequential and the distributed engine."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import FLConfig, get_wrn_config
+from repro.data import SyntheticImageDataset, partition_k_shards
+from repro.fl import transport as T
+from repro.fl.comms import CommLedger
+from repro.fl.simulation import FLSimulation
+from repro.kernels import ops, ref
+from repro.models.wrn import make_split_wrn
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _triple(rng, ck=30, shape=(4, 4, 2), frac_valid=0.6):
+    acts = jnp.asarray((rng.normal(size=(ck,) + shape) * 5).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, ck), jnp.int32)
+    valid = jnp.asarray(rng.random(ck) < frac_valid)
+    return acts, labels, valid
+
+
+# ------------------------------------------------------------------ codecs
+class TestCodecRoundTrip:
+    def test_raw_f32_identity(self):
+        rng = np.random.default_rng(0)
+        acts, labels, valid = _triple(rng)
+        a, l, v = T.SelectedKnowledge.decode(
+            T.SelectedKnowledge(acts, labels, valid,
+                                T.get_codec("raw_f32")).encode())
+        m = np.asarray(valid)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(acts)[m])
+        np.testing.assert_array_equal(np.asarray(l), np.asarray(labels)[m])
+        assert v.dtype == bool and bool(v.all()) and v.shape == (m.sum(),)
+
+    def test_f16_roundtrip_within_half_precision(self):
+        rng = np.random.default_rng(1)
+        acts, labels, valid = _triple(rng)
+        a, l, _ = T.SelectedKnowledge.decode(
+            T.SelectedKnowledge(acts, labels, valid,
+                                T.get_codec("f16")).encode())
+        want = np.asarray(acts)[np.asarray(valid)]
+        # exactly the f16 cast — the codec loses nothing beyond the dtype
+        np.testing.assert_array_equal(
+            np.asarray(a), want.astype(np.float16).astype(np.float32))
+        np.testing.assert_array_equal(np.asarray(l),
+                                      np.asarray(labels)[np.asarray(valid)])
+
+    @settings(max_examples=15, deadline=None)
+    @given(ck=st.integers(1, 64), d=st.integers(1, 64),
+           seed=st.integers(0, 999))
+    def test_int8_error_bound_property(self, ck, d, seed):
+        """|decode(encode(x)) - x| <= scale/2 (+ a few ulp) on every valid
+        element, for any shape/mask."""
+        rng = np.random.default_rng(seed)
+        acts = jnp.asarray((rng.normal(size=(ck, d)) * 10).astype(np.float32))
+        labels = jnp.asarray(rng.integers(0, 10, ck), jnp.int32)
+        valid = jnp.asarray(rng.random(ck) < 0.7)
+        codec = T.get_codec("int8")
+        wire = T.SelectedKnowledge(acts, labels, valid, codec).encode()
+        a, _, _ = T.SelectedKnowledge.decode(wire)
+        m = np.asarray(valid)
+        if not m.any():
+            assert a.shape[0] == 0
+            return
+        _, _, scale = ref.quantize_affine_ref(acts, valid)
+        err = np.abs(np.asarray(a) - np.asarray(acts)[m]).max()
+        assert err <= float(scale) * 0.5 * (1 + 1e-4) + 1e-6
+
+    def test_int8_upload_at_least_3_5x_smaller_than_raw(self):
+        """The acceptance ratio at selection-like payload shapes."""
+        rng = np.random.default_rng(2)
+        acts, labels, valid = _triple(rng, ck=100, shape=(16, 16, 16))
+        raw = len(T.SelectedKnowledge(acts, labels, valid,
+                                      T.get_codec("raw_f32")).encode())
+        i8 = len(T.SelectedKnowledge(acts, labels, valid,
+                                     T.get_codec("int8")).encode())
+        assert raw >= 3.5 * i8, (raw, i8)
+
+    def test_empty_and_all_invalid_payloads(self):
+        rng = np.random.default_rng(3)
+        acts, labels, _ = _triple(rng)
+        for name in ("raw_f32", "f16", "int8"):
+            codec = T.get_codec(name)
+            wire = T.SelectedKnowledge(acts, labels,
+                                       jnp.zeros(30, bool), codec).encode()
+            a, l, v = T.SelectedKnowledge.decode(wire)
+            assert a.shape == (0, 4, 4, 2) and l.shape == (0,) \
+                and v.shape == (0,)
+            # an all-invalid frame is framing + bitmap + params only
+            assert len(wire) < 64
+
+    def test_weight_messages_roundtrip_native_dtypes(self):
+        rng = np.random.default_rng(4)
+        tree = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+                "moe": {"idx": jnp.asarray(rng.integers(0, 9, (5,)),
+                                           jnp.int32),
+                        "h": jnp.asarray(rng.normal(size=(2, 3)),
+                                         jnp.bfloat16)}}
+        for cls in (T.WeightBroadcast, T.UpperUpdate):
+            wire = cls(tree).encode()
+            back = T.unflatten_like(tree, cls.decode(wire))
+            for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+                assert x.dtype == y.dtype
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+            # itemsize-true: bf16/int leaves are NOT billed as f32
+            payload = sum(np.asarray(x).nbytes
+                          for x in jax.tree.leaves(tree))
+            assert payload <= len(wire) <= payload + 64
+
+    def test_pytree_frame_nbytes_equals_encoded_length(self):
+        # the ledger charges weight frames by this arithmetic size instead
+        # of serializing the model — it must track len(encode()) exactly
+        rng = np.random.default_rng(5)
+        tree = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+                "b": jnp.asarray(rng.normal(size=(4,)), jnp.bfloat16),
+                "step": jnp.asarray(7, jnp.int32),
+                "idx": jnp.asarray(rng.integers(0, 9, (2, 3, 4)), jnp.int64)}
+        assert (T.pytree_frame_nbytes(tree)
+                == len(T.WeightBroadcast(tree).encode())
+                == len(T.UpperUpdate(tree).encode()))
+        with pytest.raises(ValueError):       # same contract as encode()
+            T.pytree_frame_nbytes({"c": np.zeros(2, np.complex64)})
+
+    def test_frame_validation(self):
+        wire = T.WeightBroadcast({"a": jnp.zeros((2,))}).encode()
+        with pytest.raises(ValueError):
+            T.WeightBroadcast.decode(b"XXXX" + wire[4:])
+        with pytest.raises(ValueError):
+            T.SelectedKnowledge.decode(wire)     # wrong message type
+        with pytest.raises(ValueError):
+            T.get_codec("gzip")
+
+
+# ---------------------------------------------------------- quantize kernel
+class TestQuantizeKernel:
+    """Acceptance: the Pallas quantize kernel matches ref.py bit-for-bit in
+    interpret mode — masked rows, non-aligned shapes, vmap."""
+
+    @pytest.mark.parametrize("n,d,masked", [
+        (256, 128, 0),       # aligned, unmasked
+        (256, 128, 60),      # aligned, masked rows
+        (300, 37, 25),       # non-aligned N and D
+        (100, 200, 100),     # every row masked
+        (64, 1, 3),          # single column
+        (513, 129, 7),       # non-aligned, multi-block
+    ])
+    def test_kernel_matches_oracle_bitwise(self, n, d, masked):
+        rng = np.random.default_rng(n + d + masked)
+        x = jnp.asarray((rng.normal(size=(n, d)) * 10).astype(np.float32))
+        mask = np.ones(n, bool)
+        if masked:
+            mask[rng.choice(n, masked, replace=False)] = False
+        mask = jnp.asarray(mask)
+        q, xmin, scale = ops.quantize_affine(x, mask)
+        rq, rxmin, rscale = ref.quantize_affine_ref(x, mask)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(rq))
+        assert float(xmin) == float(rxmin)
+        assert float(scale) == float(rscale)
+        # masked rows quantize to the deterministic floor level
+        if masked:
+            assert (np.asarray(q)[~np.asarray(mask)] == -128).all()
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(64, 400), d=st.integers(1, 96),
+           seed=st.integers(0, 999))
+    def test_kernel_property(self, n, d, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray((rng.normal(size=(n, d)) * 10).astype(np.float32))
+        mask = jnp.asarray(rng.random(n) > 0.3)
+        q, xmin, scale = ops.quantize_affine(x, mask)
+        rq, rxmin, rscale = ref.quantize_affine_ref(x, mask)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(rq))
+        assert (float(xmin), float(scale)) == (float(rxmin), float(rscale))
+
+    def test_kernel_vmap_clients(self):
+        """vmapped (stacked-cohort) quantize == per-client calls — the
+        distributed encoder's bit-identity to the sequential one."""
+        rng = np.random.default_rng(7)
+        xb = jnp.asarray((rng.normal(size=(4, 128, 48)) * 3)
+                         .astype(np.float32))
+        mb = jnp.asarray(rng.random((4, 128)) > 0.4)
+        qb, xminb, scaleb = jax.vmap(ops.quantize_affine)(xb, mb)
+        for i in range(4):
+            qi, xi, si = ops.quantize_affine(xb[i], mb[i])
+            np.testing.assert_array_equal(np.asarray(qb[i]), np.asarray(qi))
+            assert float(xminb[i]) == float(xi)
+            assert float(scaleb[i]) == float(si)
+
+    def test_constant_tensor_exact(self):
+        x = jnp.full((128, 16), -2.25)
+        q, xmin, scale = ops.quantize_affine(x, jnp.ones(128, bool))
+        assert float(xmin) == -2.25 and float(scale) == 1.0
+        back = ref.dequantize_affine_ref(q, xmin, scale)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# ------------------------------------------------------- ledger exactness
+@pytest.fixture(scope="module")
+def sim_setting():
+    cfg = get_wrn_config().reduced()
+    model = make_split_wrn(cfg)
+    train = SyntheticImageDataset(400, image_size=cfg.image_size, seed=0)
+    test = SyntheticImageDataset(80, image_size=cfg.image_size, seed=1)
+    clients = partition_k_shards(train, 4, k_classes=2,
+                                 samples_per_client=40)
+    return model, clients, test
+
+
+def _flcfg(**kw):
+    base = dict(num_clients=4, clients_per_round=4, local_batch_size=20,
+                pca_components=8, clusters_per_class=3, kmeans_iters=4,
+                meta_epochs=1, meta_batch_size=10)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _expected_round_bytes(model, sim, cfg):
+    """Replay round 0's sampling/keys on a fresh same-seed simulation and
+    encode every frame the round exchanges — the knowledge frames from the
+    PRE-transport selection triples (``select_for_clients``), the weight
+    frames from the updated client params — independently of the channel's
+    own charging path. -> expected (up, down) ledger dicts."""
+    from repro.core.rounds import run_cohort, select_for_clients
+    codec = T.knowledge_codec(cfg)
+    down = len(T.WeightBroadcast(sim.server.global_params).encode())
+    _, k_round, k_sample = jax.random.split(sim.key, 3)
+    idx = sim.server.sample_clients(len(sim.clients), k_sample)
+    keys = jax.random.split(k_round, len(idx))
+    cohort = [sim.clients[int(i)].client for i in idx]
+    pre = select_for_clients(model, sim.server.global_params, cohort, cfg,
+                             keys, sim.num_classes)
+    assert pre is not None
+    up_m = sum(len(T.SelectedKnowledge(a, l, v, codec).encode())
+               for _, _, (a, l, v) in pre)
+    scratch = CommLedger()
+    cparams, _, _ = run_cohort(model, sim.server.global_params, cohort,
+                               cfg, keys, scratch, sim.num_classes)
+    up_w = sum(len(T.UpperUpdate(p).encode()) for p in cparams)
+    return ({"metadata": up_m, "weights": up_w},
+            {"weights": down * len(cohort)})
+
+
+class TestLedgerByteExactness:
+    @pytest.mark.parametrize("codec", ["raw_f32", "f16", "int8"])
+    def test_full_round_ledger_equals_encoded_bytes_sequential(
+            self, sim_setting, codec):
+        model, clients, test = sim_setting
+        cfg = _flcfg(transport_codec=codec)
+        fresh = FLSimulation(model, clients, test, cfg, seed=0)
+        up, down = _expected_round_bytes(model, fresh, cfg)
+        res = FLSimulation(model, clients, test, cfg, seed=0).run(rounds=1)
+        assert res.comm["up"] == up
+        assert res.comm["down"] == down
+
+    @pytest.mark.parametrize("codec", ["raw_f32", "int8"])
+    def test_full_round_ledger_equals_encoded_bytes_distributed(
+            self, sim_setting, codec):
+        """The acceptance criterion's distributed half: a full FLSimulation
+        on the stacked engine charges exactly the encoded frame bytes —
+        and therefore matches the sequential path's ledger entry for
+        entry."""
+        model, clients, test = sim_setting
+        cfg = _flcfg(transport_codec=codec, distributed_selection=True)
+        fresh = FLSimulation(model, clients, test, cfg, seed=0)
+        up, down = _expected_round_bytes(model, fresh, cfg)
+        res = FLSimulation(model, clients, test, cfg, seed=0).run(rounds=1)
+        assert res.comm["up"] == up
+        assert res.comm["down"] == down
+        seq = FLSimulation(
+            model, clients, test,
+            dataclasses.replace(cfg, distributed_selection=False),
+            seed=0).run(rounds=1)
+        assert res.comm == seq.comm
+
+    def test_int8_simulation_completes_and_learns_signal(self, sim_setting):
+        """transport_codec='int8' end to end: the decoded (lossy) metadata
+        feeds MetaTraining and the simulation still runs to completion with
+        finite losses/accuracies and a populated byte-true ledger."""
+        model, clients, test = sim_setting
+        res = FLSimulation(model, clients, test,
+                           _flcfg(transport_codec="int8"),
+                           seed=0).run(rounds=2)
+        assert np.isfinite(res.client_loss).all()
+        assert np.isfinite(res.test_acc).all()
+        assert res.metadata_counts[-1] > 0
+        assert res.comm["up"]["metadata"] > 0
