@@ -2,11 +2,13 @@
 communication benchmark + kernel micro-benchmarks + the selection-pipeline
 suite. Prints ``name,value,extra`` CSV rows and a paper-claim validation
 summary; writes experiments/bench_results.json, BENCH_selection.json (the
-§3.1 hot-path trajectory) and BENCH_comms.json (bytes-per-round + accuracy
-per transport codec), both tracked PR over PR.
+§3.1 hot-path trajectory), BENCH_comms.json (bytes-per-round + accuracy
+per transport codec) and BENCH_faults.json (the chaos sweep: graceful
+degradation + recovery overhead under injected faults), all tracked PR
+over PR.
 
   PYTHONPATH=src python -m benchmarks.run \\
-      [--only tables|kernels|comms|selection]
+      [--only tables|kernels|comms|selection|faults]
 """
 from __future__ import annotations
 
@@ -81,6 +83,21 @@ def run_comm(results):
     return report
 
 
+def run_faults(results):
+    """Chaos benchmark over the fault-tolerant runtime: accuracy, bytes
+    (first transmission vs. retransmit/duplicate overhead) and injected-
+    vs-detected corruption counts per (drop, corrupt) rate point
+    -> BENCH_faults.json."""
+    from benchmarks import chaos_bench as F
+    print("# Fault tolerance (deterministic chaos sweep, CRC32 wire) "
+          f"-> BENCH_faults.json ({F.NUM_CLIENTS} clients x "
+          f"{F.SAMPLES_PER_CLIENT} samples, {F.ROUNDS} rounds/point)")
+    rows, report = F.run()
+    _emit(rows)
+    results["faults"] = report
+    return report
+
+
 def run_selection(results):
     """§3.1 selection pipeline at paper scale -> BENCH_selection.json."""
     from benchmarks import selection_bench as S
@@ -107,7 +124,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "tables", "kernels", "comm", "comms",
-                             "selection"])
+                             "selection", "faults"])
     args = ap.parse_args(argv)
 
     results = {}
@@ -116,6 +133,8 @@ def main(argv=None) -> None:
         run_selection(results)
     if args.only in (None, "comm", "comms"):
         run_comm(results)
+    if args.only in (None, "faults"):
+        run_faults(results)
     if args.only in (None, "kernels"):
         run_kernels(results)
     claims = {}

@@ -228,6 +228,12 @@ class FLConfig:
     transport_codec: str = "raw_f32"   # SelectedKnowledge codec:
                                        # raw_f32 | f16 | int8 (Pallas
                                        # quantize when use_pallas_selection)
+    transport_checksum: bool = False   # CRC32 trailer on every frame (wire
+                                       # v2 flags bit 0; +4B/frame). Off by
+                                       # default so fault-free ledgers stay
+                                       # byte-identical to the pre-CRC wire;
+                                       # chaos runs turn it on to make every
+                                       # in-flight corruption detectable.
 
 
 @dataclass(frozen=True)

@@ -327,17 +327,21 @@ def cohort_round(model: SplitModel, params: PyTree,
                  clients: List[ClientData], cfg: FLConfig, keys: jax.Array,
                  ledger: CommLedger, num_classes: int, *,
                  mesh: Optional[Mesh] = None,
-                 chunk_size: Optional[int] = None):
+                 chunk_size: Optional[int] = None,
+                 channel=None, client_ids=None):
     """Everything the cohort's clients do in one round — chunked/sharded
     Extract&Selection plus the stacked LocalUpdate — with the same
     transport-charged ledger accounting as ``rounds.client_round``: the
     gathered (sel_acts, sel_y, valid) triple is encoded through the cohort
-    entry of ``repro.fl.transport`` (one vmapped quantize for the int8
+    entry of the transport ``channel`` (one vmapped quantize for the int8
     codec — the stack never unbatches for the hot path, only for framing),
     each UpperUpdate frame is charged per client at its exact size, and the
-    metadata handed to the server is the DECODED wire content. Returns
-    per-client lists (params, metadata, loss) interchangeable with the
-    sequential loop's — including byte-identical ledger totals."""
+    metadata handed to the server is the DECODED wire content (None where a
+    faulty channel lost the frame). Returns per-client lists
+    (params, metadata, loss) interchangeable with the sequential loop's —
+    including byte-identical ledger totals, and identical injected faults:
+    the channel keys its randomness on the GLOBAL ``client_ids``, not on
+    engine call order."""
     from repro.fl import transport as T
     assert cfg.use_selection, (
         "cohort_round implements the selection path only; the Table-2 "
@@ -354,19 +358,25 @@ def cohort_round(model: SplitModel, params: PyTree,
             model, params, xs.shape[1:], xs.dtype, b,
             data_axis=data_axis_size(mesh))
 
+    if channel is None:
+        channel = T.Channel(ledger, checksum=cfg.transport_checksum)
+    if client_ids is None:
+        client_ids = list(range(b))
+
     sel_acts, sel_ys, valid = select_cohort(
         model, params, xs, ys, keys, cfg, num_classes,
         chunk_size=chunk_size, mesh=mesh, gather=True)
 
-    metadatas = T.upload_knowledge_batched(ledger, sel_acts, sel_ys, valid,
-                                           T.knowledge_codec(cfg))
+    metadatas = channel.upload_knowledge_batched(
+        [int(c) for c in client_ids], sel_acts, sel_ys, valid,
+        T.knowledge_codec(cfg))
 
     cparams, losses = local_update_cohort(model, params, xs, ys, keys, cfg,
                                           mesh=mesh)
     client_params = [jax.tree.map(lambda a, i=i: a[i], cparams)
                      for i in range(b)]
-    for p in client_params:
-        T.upload_update(ledger, p)
+    for cid, p in zip(client_ids, client_params):
+        channel.upload_update(int(cid), p)
     return client_params, metadatas, [float(l) for l in np.asarray(losses)]
 
 

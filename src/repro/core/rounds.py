@@ -132,16 +132,23 @@ def local_batches(x: jnp.ndarray, y: jnp.ndarray, k_loc: jax.Array,
 
 def client_round(model: SplitModel, params: PyTree, client: ClientData,
                  cfg: FLConfig, key: jax.Array, ledger: CommLedger,
-                 num_classes: int, precomputed=None):
+                 num_classes: int, precomputed=None, channel=None,
+                 client_id: int = 0):
     """Client k's work: Extract&Selection + LocalUpdate. ``precomputed`` is
     an optional (x, y, (sel_acts, sel_y, valid)) tuple from
     ``select_for_clients`` (already on device).
 
-    Both uploads flow through ``repro.fl.transport``: the ledger is charged
-    the exact frame bytes, and the metadata handed back is what the server
-    DECODES (valid rows only, dequantized under a lossy
-    ``cfg.transport_codec``), so codec loss is visible to MetaTraining."""
+    Both uploads flow through a transport ``channel`` (a perfect wire by
+    default; ``repro.fl.faults.FaultyChannel`` injects crashes/corruption):
+    the ledger is charged the exact frame bytes, and the metadata handed
+    back is what the server DECODES (valid rows only, dequantized under a
+    lossy ``cfg.transport_codec``) — or None when the frame never survived
+    the wire. ``client_id`` is the client's GLOBAL index: the fault
+    runtime keys its per-(round, client) randomness on it, which is what
+    makes injected faults identical across engines."""
     from repro.fl import transport as T
+    if channel is None:
+        channel = T.Channel(ledger, checksum=cfg.transport_checksum)
     if precomputed is not None:
         x, y, metadata = precomputed
     else:
@@ -163,12 +170,12 @@ def client_round(model: SplitModel, params: PyTree, client: ClientData,
                 pca_solver=cfg.pca_solver)
             metadata = (jnp.take(acts, sel.indices, axis=0),
                         jnp.take(y, sel.indices, axis=0), sel.valid)
-        metadata = T.upload_knowledge(ledger, *metadata, codec)
+        metadata = channel.upload_knowledge(client_id, *metadata, codec)
     else:
         # Table 2 baseline: ALL activation maps are uploaded.
         acts = model.apply_lower(params, x)
-        metadata = T.upload_knowledge(
-            ledger, acts, y, jnp.ones((x.shape[0],), bool), codec)
+        metadata = channel.upload_knowledge(
+            client_id, acts, y, jnp.ones((x.shape[0],), bool), codec)
 
     # ---- LocalUpdate ----
     bx, by = local_batches(x, y, k_loc, cfg)
@@ -176,7 +183,7 @@ def client_round(model: SplitModel, params: PyTree, client: ClientData,
     new_params, _, losses = fa.local_update(
         params, opt, opt.init(params), (bx, by),
         lambda p, b: model.loss(p, b))
-    T.upload_update(ledger, new_params)
+    channel.upload_update(client_id, new_params)
     return new_params, metadata, float(losses.mean())
 
 
@@ -188,12 +195,22 @@ def server_round(model: SplitModel, prev_global: PyTree, upper_init: PyTree,
 
     ``metadatas`` are the DECODED SelectedKnowledge triples — the transport
     layer sends valid slots only, so per-client row counts vary (and can be
-    zero for a client whose every cluster came back empty)."""
-    acts = jnp.concatenate([m[0] for m in metadatas], 0)
-    ys = jnp.concatenate([m[1] for m in metadatas], 0)
-    valid = jnp.concatenate([m[2] for m in metadatas], 0)
+    zero for a client whose every cluster came back empty). A ``None``
+    entry is a frame that never survived the wire (client crash or an
+    exhausted retry budget): the server aggregates over exactly the
+    knowledge that ARRIVED."""
+    arrived = [m for m in metadatas if m is not None]
+    if arrived:
+        acts = jnp.concatenate([m[0] for m in arrived], 0)
+        ys = jnp.concatenate([m[1] for m in arrived], 0)
+        valid = jnp.concatenate([m[2] for m in arrived], 0)
+        nmeta = int(valid.sum())
+    else:
+        acts = ys = valid = None
+        nmeta = 0
 
-    if acts.shape[0] == 0:      # nothing arrived: W_S^u(t) stays W_G^u(0)
+    if acts is None or acts.shape[0] == 0:
+        # nothing arrived: W_S^u(t) stays W_G^u(0)
         upper, meta_losses = upper_init, jnp.zeros((0,))
     else:
         upper, meta_losses = mt.meta_train(
@@ -203,38 +220,59 @@ def server_round(model: SplitModel, prev_global: PyTree, upper_init: PyTree,
 
     # ModelCompose: lower layers from W_G^l(t-1), upper from W_S^u(t)
     composed = model.merge(model.split(prev_global)[0], upper)
-    # Eq. 2, optionally with the straggler/deadline mask (0-weight clients
-    # missed FLServer.deadline; None = every client counts, the exact
-    # unweighted mean — bit-identical to the no-deadline path)
-    new_global = fa.weight_average(client_params, weights=fedavg_weights)
+    # Eq. 2, renormalized over the clients that count: 0-weight clients
+    # straggled past FLServer.deadline or never delivered an update frame;
+    # None = every client counts, the exact unweighted mean — bit-identical
+    # to the no-deadline perfect-wire path. A round where NO update counts
+    # (every client crashed/lost) keeps W_G(t-1): averaging nothing must
+    # not destroy the model.
+    if fedavg_weights is not None and not any(fedavg_weights):
+        new_global = prev_global
+    elif not client_params:
+        new_global = prev_global
+    else:
+        new_global = fa.weight_average(client_params,
+                                       weights=fedavg_weights)
     return RoundResult(
         global_params=new_global, composed_params=composed,
-        upper_trained=upper, metadata_count=int(valid.sum()),
+        upper_trained=upper, metadata_count=nmeta,
         total_samples=0, meta_losses=np.asarray(meta_losses))
 
 
 def run_cohort(model: SplitModel, params: PyTree,
                clients: List[ClientData], cfg: FLConfig, keys: jax.Array,
-               ledger: CommLedger, num_classes: int, mesh=None):
+               ledger: CommLedger, num_classes: int, mesh=None,
+               channel=None, client_ids=None):
     """The client side of one round for a whole cohort, with the engine
     dispatch in ONE place (shared by ``run_round`` and ``FLSimulation``):
     the stacked pod engine (``distributed.cohort_round``) when configured
     and the cohort stacks within budget, else the per-client loop with
     batched-selection precompute. Returns per-client lists
-    (params, metadata, loss)."""
+    (params, metadata, loss) — metadata entries are None for frames that
+    did not survive a faulty ``channel``.
+
+    ``client_ids`` are the cohort members' GLOBAL indices (defaults to
+    cohort position): the fault runtime draws each client's faults from
+    (seed, round, id) streams, so whichever engine runs the round — and in
+    whatever order — the same clients crash and the same frames corrupt."""
     from repro.core import distributed as D
+    if client_ids is None:
+        client_ids = list(range(len(clients)))
     if (cfg.distributed_selection and cfg.use_selection
             and D.cohort_is_stackable(clients)
             and D.cohort_inputs_fit(clients)):
         return D.cohort_round(model, params, clients, cfg, keys, ledger,
-                              num_classes, mesh=mesh)
+                              num_classes, mesh=mesh, channel=channel,
+                              client_ids=client_ids)
     pre = select_for_clients(model, params, clients, cfg, keys,
                              num_classes, mesh=mesh)
     client_params, metadatas, losses = [], [], []
     for i, (c, k) in enumerate(zip(clients, keys)):
         p, m, l = client_round(model, params, c, cfg, k, ledger,
                                num_classes,
-                               precomputed=None if pre is None else pre[i])
+                               precomputed=None if pre is None else pre[i],
+                               channel=channel,
+                               client_id=int(client_ids[i]))
         client_params.append(p)
         metadatas.append(m)
         losses.append(l)

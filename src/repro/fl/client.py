@@ -37,6 +37,7 @@ class FLClient:
 
     def run(self, model: SplitModel, params: Any, cfg: FLConfig,
             key: jax.Array, ledger: CommLedger, num_classes: int,
-            precomputed=None):
+            precomputed=None, channel=None, client_id: int = 0):
         return client_round(model, params, self.client, cfg, key, ledger,
-                            num_classes, precomputed=precomputed)
+                            num_classes, precomputed=precomputed,
+                            channel=channel, client_id=client_id)

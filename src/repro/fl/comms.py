@@ -16,11 +16,23 @@ Uploads (client -> server) and downloads (server -> client) are tallied by
 category — ``"metadata"`` for SelectedKnowledge frames (the paper's ~1.6%
 claim lives here), ``"weights"`` for WeightBroadcast/UpperUpdate — along
 with per-category frame counts (one frame = one encoded message), so
-bytes-per-frame is recoverable without re-running."""
+bytes-per-frame is recoverable without re-running.
+
+Fault tolerance adds two categories the perfect wire never charges:
+``"retransmit"`` for every re-send of a frame whose previous delivery
+failed to decode (the recovery overhead the chaos benchmark reports), and
+``"duplicate"`` for network-cloned deliveries the receiver deduplicates.
+Both are real traffic — they count toward ``total_up`` — but are kept out
+of ``"metadata"``/``"weights"`` so the paper's efficiency numbers stay
+attributable to first transmissions."""
 from __future__ import annotations
 
 from collections import defaultdict
 from dataclasses import dataclass, field
+
+# fault-runtime charging categories (repro.fl.faults.FaultyChannel)
+RETRANSMIT = "retransmit"
+DUPLICATE = "duplicate"
 
 
 @dataclass
@@ -50,7 +62,9 @@ class CommLedger:
         return {"up": dict(self.up), "down": dict(self.down),
                 "up_frames": dict(self.up_frames),
                 "down_frames": dict(self.down_frames),
-                "total_up": self.total_up, "total_down": self.total_down}
+                "total_up": self.total_up, "total_down": self.total_down,
+                "retransmit_up": self.up.get(RETRANSMIT, 0),
+                "duplicate_up": self.up.get(DUPLICATE, 0)}
 
     def reset(self):
         self.up.clear()

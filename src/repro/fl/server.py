@@ -1,12 +1,23 @@
 """Server role: client sampling, metadata aggregation + MetaTraining +
-ModelCompose + WeightAverage, deadline/straggler policy.
+ModelCompose + WeightAverage, deadline/straggler/quarantine policy.
 
 Downloads go through ``repro.fl.transport``: ``broadcast_weights`` charges
 the exact encoded WeightBroadcast frame (native dtypes — the old
 ``size * 4`` billed bf16/int leaves as f32). ``deadline`` is the
 straggler policy: the simulation masks clients whose estimated local time
 exceeds it out of WeightAverage instead of waiting (``stragglers`` arg of
-``aggregate``)."""
+``aggregate``).
+
+Fault tolerance generalizes that mask into an ARRIVAL mask: ``aggregate``
+zero-weights any client whose UpperUpdate frame did not decode this round
+(crash or exhausted retransmit budget) — Eq. 2 renormalizes over the
+clients that actually delivered. ``record_arrivals`` tracks per-client
+failure streaks; a client that fails ``quarantine_after`` consecutive
+rounds is held out of ``sample_clients`` for ``quarantine_cooldown``
+rounds (a flapping client should not keep eating cohort slots and
+retransmit bytes), then re-admitted. With the policy off (the default) and
+every frame arriving, sampling and aggregation are bit-identical to the
+perfect-wire path."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -32,20 +43,71 @@ class FLServer:
     round_idx: int = 0
     deadline: Optional[float] = None        # seconds; None = wait for all
     ledger: CommLedger = field(default_factory=CommLedger)
+    # --- quarantine policy (0 = off) ---
+    quarantine_after: int = 0               # K consecutive failed rounds
+    quarantine_cooldown: int = 5            # rounds held out once tripped
+    fail_streak: dict = field(default_factory=dict)       # cid -> streak
+    quarantined_until: dict = field(default_factory=dict)  # cid -> round
+
+    def eligible_clients(self, num_available: int) -> List[int]:
+        """Client ids currently allowed into a cohort: everyone whose
+        quarantine window (if any) has expired. Quarantine expiring IS the
+        re-admission — no separate probation state."""
+        return [i for i in range(num_available)
+                if self.quarantined_until.get(i, 0) <= self.round_idx]
+
+    def num_quarantined(self, num_available: int) -> int:
+        return num_available - len(self.eligible_clients(num_available))
 
     def sample_clients(self, num_available: int, key: jax.Array) -> np.ndarray:
-        m = min(self.cfg.clients_per_round, num_available)
-        return np.asarray(
-            jax.random.choice(key, num_available, (m,), replace=False))
+        """Uniform cohort sampling over the ELIGIBLE clients. When nobody
+        is quarantined this takes the exact historical draw (choice over
+        ``num_available``) so seeded runs without faults are bit-identical;
+        an (unreachable under the policy's own arithmetic, but guarded)
+        fully-quarantined population falls back to everyone — an empty
+        round would lose more than a flaky cohort."""
+        elig = self.eligible_clients(num_available)
+        if len(elig) == num_available:
+            m = min(self.cfg.clients_per_round, num_available)
+            return np.asarray(
+                jax.random.choice(key, num_available, (m,), replace=False))
+        if not elig:
+            elig = list(range(num_available))
+        m = min(self.cfg.clients_per_round, len(elig))
+        pos = np.asarray(
+            jax.random.choice(key, len(elig), (m,), replace=False))
+        return np.asarray(elig, dtype=np.int64)[pos]
 
-    def broadcast_weights(self, num_clients: int) -> int:
+    def record_arrivals(self, client_ids: Sequence[int],
+                        arrived: Sequence[bool]) -> None:
+        """Update per-client failure streaks after a round (call after
+        ``aggregate``, so ``round_idx`` already names the NEXT round and
+        the cooldown window counts from it). A delivered update clears the
+        client's streak and any quarantine record."""
+        for cid, ok in zip(client_ids, arrived):
+            cid = int(cid)
+            if ok:
+                self.fail_streak.pop(cid, None)
+                self.quarantined_until.pop(cid, None)
+                continue
+            streak = self.fail_streak.get(cid, 0) + 1
+            self.fail_streak[cid] = streak
+            if self.quarantine_after and streak >= self.quarantine_after:
+                self.quarantined_until[cid] = (self.round_idx
+                                               + self.quarantine_cooldown)
+                self.fail_streak[cid] = 0   # streak restarts post-cooldown
+
+    def broadcast_weights(self, num_clients: int, channel=None) -> int:
         """server -> clients: the cohort downloads W_G(t-1) when it is
         FORMED (so round 0's initial distribution is counted, and every
         broadcast is attributed to the cohort that actually received it —
         it used to be charged post-round against the next cohort's size).
-        Charged at the exact WeightBroadcast frame size per member; returns
-        the bytes charged."""
+        Charged at the exact WeightBroadcast frame size per member (through
+        ``channel`` when given, so checksummed wires bill their CRC
+        trailers); returns the bytes charged."""
         from repro.fl import transport as T
+        if channel is not None:
+            return channel.broadcast_weights(self.global_params, num_clients)
         return T.broadcast_weights(self.ledger, self.global_params,
                                    num_clients)
 
@@ -65,13 +127,27 @@ class FLServer:
 
     def aggregate(self, client_params: List[PyTree], metadatas: List[tuple],
                   key: jax.Array,
-                  stragglers: Optional[np.ndarray] = None) -> RoundResult:
+                  stragglers: Optional[np.ndarray] = None,
+                  arrived: Optional[np.ndarray] = None) -> RoundResult:
         """``stragglers`` (from ``straggler_mask``) zero-weights the marked
         clients in Eq. 2 — their metadata still counts (Extract&Selection
         is the cheap early phase; it is LocalUpdate that misses the
-        deadline)."""
-        weights = (None if stragglers is None
-                   else [0.0 if s else 1.0 for s in stragglers])
+        deadline). ``arrived`` (from the transport channel) zero-weights
+        clients whose UpperUpdate frame never decoded — the generalized
+        arrival mask; both None keeps the exact unweighted-mean path. A
+        round where no update counts keeps W_G(t-1) (guarded in
+        ``server_round``)."""
+        if stragglers is None and (arrived is None
+                                   or bool(np.all(arrived))):
+            weights = None
+        else:
+            n = len(client_params)
+            ok = np.ones(n, bool)
+            if stragglers is not None:
+                ok &= ~np.asarray(stragglers, bool)
+            if arrived is not None:
+                ok &= np.asarray(arrived, bool)
+            weights = [1.0 if o else 0.0 for o in ok]
         res = server_round(self.model, self.global_params, self.upper_init,
                            client_params, metadatas, self.cfg, key,
                            fedavg_weights=weights)

@@ -6,7 +6,18 @@ tracking the train-vs-test accuracy gap (the paper's Fig. 2 overfitting
 evidence) plus communication bytes with/without selection (the efficiency
 claim). With ``cfg.distributed_selection`` the cohort's client side runs
 through the pod-scale stacked engine (``repro.core.distributed``) instead of
-the per-client Python loop — same math, optionally sharded over ``mesh``."""
+the per-client Python loop — same math, optionally sharded over ``mesh``.
+
+Fault tolerance: pass ``fault_plan`` (a ``repro.fl.faults.FaultPlan``) and
+every frame crosses a ``FaultyChannel`` instead of the perfect wire —
+clients crash, frames corrupt/truncate/duplicate, detected corruption is
+retransmitted (bounded, charged under the ledger's ``retransmit``
+category), and the server aggregates over exactly the clients whose
+update frames decoded (the arrival mask; Eq. 2 renormalizes). Clients
+failing ``quarantine_after`` consecutive rounds sit out
+``quarantine_cooldown`` rounds. With no plan (or an all-zero one) the
+round math, sampling streams and ledger are bit-identical to the
+fault-free simulator."""
 from __future__ import annotations
 
 import time
@@ -25,6 +36,7 @@ from repro.data.partition import ClientData
 from repro.fl.client import FLClient
 from repro.fl.comms import CommLedger
 from repro.fl.server import FLServer
+from repro.fl.transport.channel import Channel
 
 
 @dataclass
@@ -38,6 +50,11 @@ class SimulationResult:
     straggler_counts: List[int] = field(default_factory=list)  # dropped per round
     comm: dict = field(default_factory=dict)
     wall_time: float = 0.0
+    # --- fault-tolerance counters (all-zero on the perfect wire) ---
+    drops: List[int] = field(default_factory=list)             # updates lost/round
+    corruptions_detected: List[int] = field(default_factory=list)
+    retransmits: List[int] = field(default_factory=list)
+    quarantined: List[int] = field(default_factory=list)       # held out/round
 
     @property
     def selected_fraction(self) -> float:
@@ -57,7 +74,9 @@ class FLSimulation:
                  test: Dataset, cfg: FLConfig, seed: int = 0,
                  client_speeds: Optional[np.ndarray] = None,
                  mesh=None, deadline: Optional[float] = None,
-                 flops_per_sample: float = 1e9):
+                 flops_per_sample: float = 1e9,
+                 fault_plan=None, fault_seed: int = 0,
+                 quarantine_after: int = 0, quarantine_cooldown: int = 5):
         self.model, self.cfg, self.test = model, cfg, test
         self.mesh = mesh                 # 'data'-axis mesh for sharded selection
         key = jax.random.PRNGKey(seed)
@@ -67,13 +86,27 @@ class FLSimulation:
         # deadline: the ROADMAP straggler policy — clients whose estimated
         # local time (FLClient.local_time under flops_per_sample) exceeds
         # it are masked out of WeightAverage instead of waited for
-        self.server = FLServer(model, params, upper0, cfg, deadline=deadline)
+        self.server = FLServer(model, params, upper0, cfg, deadline=deadline,
+                               quarantine_after=quarantine_after,
+                               quarantine_cooldown=quarantine_cooldown)
+        # the wire every frame crosses: perfect, or fault-injecting under a
+        # FaultPlan (its own seed, so fault schedules and FL randomness are
+        # independent streams)
+        if fault_plan is not None and fault_plan.any_faults:
+            from repro.fl.faults import FaultyChannel
+            self.channel = FaultyChannel(self.server.ledger, fault_plan,
+                                         seed=fault_seed,
+                                         checksum=cfg.transport_checksum)
+        else:
+            self.channel = Channel(self.server.ledger,
+                                   checksum=cfg.transport_checksum)
         self.flops_per_sample = flops_per_sample
         speeds = client_speeds if client_speeds is not None else np.ones(len(clients))
         self.clients = [FLClient(c, s) for c, s in zip(clients, speeds)]
         self.num_classes = test.num_classes
 
-    def _cohort_round(self, cohort: List[FLClient], keys: jax.Array):
+    def _cohort_round(self, cohort: List[FLClient], keys: jax.Array,
+                      client_ids=None):
         """Client side of one round -> (params, metadatas, losses) lists.
         ``rounds.run_cohort`` owns the engine dispatch: the stacked pod
         engine when configured (and the cohort stacks within budget), else
@@ -81,7 +114,8 @@ class FLSimulation:
         return run_cohort(
             self.model, self.server.global_params,
             [c.client for c in cohort], self.cfg, keys,
-            self.server.ledger, self.num_classes, mesh=self.mesh)
+            self.server.ledger, self.num_classes, mesh=self.mesh,
+            channel=self.channel, client_ids=client_ids)
 
     def run(self, rounds: int, eval_every: int = 1,
             verbose: bool = False) -> SimulationResult:
@@ -90,6 +124,9 @@ class FLSimulation:
         total_samples = sum(len(c.client.data) for c in self.clients)
         for t in range(rounds):
             self.key, k_round, k_sample = jax.random.split(self.key, 3)
+            res.quarantined.append(
+                self.server.num_quarantined(len(self.clients)))
+            self.channel.begin_round(t)
             idx = self.server.sample_clients(len(self.clients), k_sample)
             # per-client keys keep the seed's streams (split count changes
             # every key, so the count must stay len(idx)); the aggregate
@@ -99,8 +136,19 @@ class FLSimulation:
             k_server = jax.random.fold_in(k_round, len(idx))
             cohort = [self.clients[int(i)] for i in idx]
             # the formed cohort downloads W_G(t-1) NOW (round 0 included)
-            self.server.broadcast_weights(len(cohort))
-            cparams, metas, losses = self._cohort_round(cohort, keys)
+            self.server.broadcast_weights(len(cohort), channel=self.channel)
+            cparams, metas, losses = self._cohort_round(
+                cohort, keys, client_ids=[int(i) for i in idx])
+            # arrival mask: which UpperUpdate frames actually decoded (the
+            # perfect wire says all); where a corrupted frame was silently
+            # accepted (checksums off) the server must consume ITS decode,
+            # not the client's in-memory params
+            arrived = np.asarray(
+                [self.channel.update_arrived(int(i)) for i in idx])
+            for j, i in enumerate(idx):
+                dec = self.channel.decoded_update(int(i))
+                if dec is not None:
+                    cparams[j] = dec
             # deadline policy: estimated local times decide who the server
             # stops waiting for (mask=None -> exact unweighted Eq. 2)
             mask = self.server.straggler_mask(
@@ -108,7 +156,12 @@ class FLSimulation:
                  for c in cohort])
             res.straggler_counts.append(0 if mask is None else int(mask.sum()))
             rr = self.server.aggregate(cparams, metas, k_server,
-                                       stragglers=mask)
+                                       stragglers=mask, arrived=arrived)
+            self.server.record_arrivals([int(i) for i in idx], arrived)
+            stats = self.channel.round_stats()
+            res.drops.append(int((~arrived).sum()))
+            res.corruptions_detected.append(stats["corruptions_detected"])
+            res.retransmits.append(stats["retransmits"])
             res.client_loss.append(float(np.mean(losses)))
             res.metadata_counts.append(rr.metadata_count)
             res.cohort_samples.append(

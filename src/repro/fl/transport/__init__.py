@@ -9,23 +9,38 @@ Three layers:
   ``channel``   ledger-charging helpers the round engines call — every
                 CommLedger entry is ``len(encode())``, byte-true
 
-See README.md's communication section for the wire layout and the measured
-bytes-per-round table (benchmarks/comm_bench.py -> BENCH_comms.json).
+A fourth surface, ``errors``, is the decode side's failure contract: every
+malformed wire buffer raises a typed ``FrameError`` (never a raw
+struct/IndexError/numpy crash), which is what makes bounded
+retry-with-backoff in ``repro.fl.faults`` possible.
+
+See README.md's communication and fault-tolerance sections for the wire
+layout (v2: flags byte + optional CRC32 trailer) and the measured tables
+(benchmarks/comm_bench.py -> BENCH_comms.json, benchmarks/chaos_bench.py
+-> BENCH_faults.json).
 """
-from repro.fl.transport.channel import (broadcast_weights, knowledge_codec,
-                                        prequantize_cohort, upload_knowledge,
+from repro.fl.transport.channel import (Channel, broadcast_weights,
+                                        knowledge_codec, prequantize_cohort,
+                                        upload_knowledge,
                                         upload_knowledge_batched,
                                         upload_update)
 from repro.fl.transport.codecs import (Int8Codec, Quantized, TensorCodec,
                                        codec_by_code, get_codec)
-from repro.fl.transport.messages import (HEADER_BYTES, SelectedKnowledge,
-                                         UpperUpdate, WeightBroadcast,
-                                         pytree_frame_nbytes, unflatten_like)
+from repro.fl.transport.errors import (BadMagic, BadVersion, ChecksumMismatch,
+                                       FrameError, LengthMismatch,
+                                       TruncatedFrame, UnknownCodec,
+                                       UnknownDtype, WrongMessageType)
+from repro.fl.transport.messages import (CRC_BYTES, HEADER_BYTES,
+                                         SelectedKnowledge, UpperUpdate,
+                                         WeightBroadcast, pytree_frame_nbytes,
+                                         unflatten_like)
 
 __all__ = [
-    "HEADER_BYTES", "Int8Codec", "Quantized", "SelectedKnowledge",
-    "TensorCodec", "UpperUpdate", "WeightBroadcast", "broadcast_weights",
-    "codec_by_code", "get_codec", "knowledge_codec", "prequantize_cohort",
-    "pytree_frame_nbytes", "unflatten_like", "upload_knowledge",
-    "upload_knowledge_batched", "upload_update",
+    "BadMagic", "BadVersion", "CRC_BYTES", "Channel", "ChecksumMismatch",
+    "FrameError", "HEADER_BYTES", "Int8Codec", "LengthMismatch", "Quantized",
+    "SelectedKnowledge", "TensorCodec", "TruncatedFrame", "UnknownCodec",
+    "UnknownDtype", "UpperUpdate", "WeightBroadcast", "WrongMessageType",
+    "broadcast_weights", "codec_by_code", "get_codec", "knowledge_codec",
+    "prequantize_cohort", "pytree_frame_nbytes", "unflatten_like",
+    "upload_knowledge", "upload_knowledge_batched", "upload_update",
 ]

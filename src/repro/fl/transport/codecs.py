@@ -29,7 +29,21 @@ from typing import Dict, Optional, Tuple, Type
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fl.transport.errors import LengthMismatch, UnknownCodec
 from repro.kernels import ref as kref
+
+
+def _check_rows(payload: bytes, nvalid: int, d: int, itemsize: int,
+                name: str) -> None:
+    """A decode-side guard shared by every codec: the row payload must be
+    EXACTLY the bytes the declared row count implies — a truncated or
+    padded row block is wire corruption (``LengthMismatch``), never a
+    numpy ``frombuffer``/``reshape`` ValueError escaping to the caller."""
+    want = nvalid * d * itemsize
+    if len(payload) != want:
+        raise LengthMismatch(
+            f"{name} row payload is {len(payload)} bytes, expected "
+            f"{want} ({nvalid} rows x {d} x {itemsize}B)")
 
 
 @dataclass(frozen=True)
@@ -66,6 +80,10 @@ class RawF32Codec(TensorCodec):
             x[valid].astype(np.float32)).tobytes(), b""
 
     def decode(self, payload, nvalid, d, params):
+        _check_rows(payload, nvalid, d, 4, self.name)
+        if params:
+            raise LengthMismatch(
+                f"{self.name} takes no codec params, got {len(params)}B")
         return np.frombuffer(payload, np.float32).reshape(nvalid, d).copy()
 
 
@@ -77,6 +95,10 @@ class F16Codec(TensorCodec):
             x[valid].astype(np.float16)).tobytes(), b""
 
     def decode(self, payload, nvalid, d, params):
+        _check_rows(payload, nvalid, d, 2, self.name)
+        if params:
+            raise LengthMismatch(
+                f"{self.name} takes no codec params, got {len(params)}B")
         half = np.frombuffer(payload, np.float16).reshape(nvalid, d)
         return half.astype(np.float32)
 
@@ -109,6 +131,11 @@ class Int8Codec(TensorCodec):
         return np.ascontiguousarray(z.q[valid]).tobytes(), params
 
     def decode(self, payload, nvalid, d, params):
+        _check_rows(payload, nvalid, d, 1, self.name)
+        if len(params) != 8:
+            raise LengthMismatch(
+                f"{self.name} needs 8 param bytes (xmin, scale), "
+                f"got {len(params)}")
         xmin, scale = struct.unpack("<ff", params)
         q = np.frombuffer(payload, np.int8).reshape(nvalid, d)
         # the dequant contract (kernels/ref.py): x_hat = (q+128)*scale+xmin,
@@ -135,7 +162,8 @@ def get_codec(name: str, use_pallas: bool = False) -> TensorCodec:
 
 def codec_by_code(code: int) -> TensorCodec:
     """Wire-id -> codec (decode side; the frame header names the codec, so
-    a receiver never needs out-of-band codec config)."""
+    a receiver never needs out-of-band codec config). A code outside the
+    registry is wire corruption, not a config error: ``UnknownCodec``."""
     if code not in _BY_CODE:
-        raise ValueError(f"unknown codec wire id {code}")
+        raise UnknownCodec(f"unknown codec wire id {code}")
     return _BY_CODE[code]()

@@ -16,15 +16,22 @@ contract, and the CommLedger is charged ``len(encode())`` — the byte-true
 replacement for the old ``size * 4`` estimates (which miscounted every
 non-f32 payload and ignored framing entirely).
 
-Frame layout (little-endian):
+Frame layout (little-endian), wire VERSION 2:
 
   0   4  magic  b"FLTP"
-  4   1  version
+  4   1  version (2; version-1 frames still decode — no flags, no trailer)
   5   1  msg type
   6   1  codec wire id (knowledge frames; 0 for weight frames)
-  7   1  reserved
-  8   4  payload length
+  7   1  flags (bit 0 = CRC32 trailer present; v1's reserved byte)
+  8   4  payload length (trailer NOT included)
   12  …  payload
+  +4     CRC32 of header+payload, only when flags bit 0 is set
+
+The CRC covers the header too, so a bit-flip anywhere in the frame —
+length field included — is caught; decode raises the typed ``FrameError``
+hierarchy (``transport.errors``) instead of leaking ``struct.error`` /
+``IndexError`` / numpy ``ValueError`` on mangled input, so the fault
+runtime can tell retriable corruption from protocol bugs.
 
 Weight payloads are a leaf count followed by array blocks
 (dtype u8 | ndim u8 | dims u32* | raw bytes) in tree-flatten order — the
@@ -40,6 +47,7 @@ instead of a full metadata tensor.
 from __future__ import annotations
 
 import struct
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, List, Optional, Tuple
 
@@ -49,9 +57,17 @@ import numpy as np
 
 from repro.fl.transport.codecs import (Quantized, TensorCodec, codec_by_code,
                                        get_codec)
+from repro.fl.transport.errors import (BadMagic, BadVersion, ChecksumMismatch,
+                                       FrameError, LengthMismatch,
+                                       TruncatedFrame, UnknownDtype,
+                                       WrongMessageType)
 
 MAGIC = b"FLTP"
-VERSION = 1
+VERSION = 2
+V1 = 1                                         # still decoded (compat)
+FLAG_CHECKSUM = 0x01                           # flags bit 0: CRC32 trailer
+_KNOWN_FLAGS = FLAG_CHECKSUM
+CRC_BYTES = 4
 
 MSG_WEIGHT_BROADCAST = 1
 MSG_SELECTED_KNOWLEDGE = 2
@@ -75,21 +91,59 @@ def _dtype_code(dt) -> int:
     return _DTYPE_CODE[dt]
 
 
-def _pack_header(msg_type: int, codec_code: int, payload: bytes) -> bytes:
-    return _HEADER.pack(MAGIC, VERSION, msg_type, codec_code, 0,
-                        len(payload)) + payload
+def _pack_header(msg_type: int, codec_code: int, payload: bytes,
+                 checksum: bool = False) -> bytes:
+    flags = FLAG_CHECKSUM if checksum else 0
+    frame = _HEADER.pack(MAGIC, VERSION, msg_type, codec_code, flags,
+                         len(payload)) + payload
+    if checksum:
+        frame += struct.pack("<I", zlib.crc32(frame) & 0xFFFFFFFF)
+    return frame
 
 
 def _unpack_header(wire: bytes) -> Tuple[int, int, bytes]:
-    magic, ver, msg_type, codec_code, _, plen = _HEADER.unpack_from(wire, 0)
+    """Parse + validate a frame down to its payload. Raises the typed
+    ``FrameError``s (never ``struct.error``): a sub-header buffer is
+    ``TruncatedFrame``, a wrong total length splits into truncation vs.
+    trailing garbage, and when the v2 checksum flag is set the CRC32
+    trailer is verified over header+payload — so a flip ANYWHERE in the
+    frame (length field included: a corrupt length either fails the total
+    length check or feeds wrong bytes to the CRC) is caught."""
+    if len(wire) < HEADER_BYTES:
+        raise TruncatedFrame(
+            f"frame shorter than the {HEADER_BYTES}-byte header: {len(wire)}")
+    magic, ver, msg_type, codec_code, flags, plen = _HEADER.unpack_from(
+        wire, 0)
     if magic != MAGIC:
-        raise ValueError(f"bad frame magic {magic!r}")
-    if ver != VERSION:
-        raise ValueError(f"unsupported frame version {ver}")
-    payload = wire[HEADER_BYTES:]
-    if len(payload) != plen:
-        raise ValueError(f"frame length mismatch: {len(payload)} != {plen}")
-    return msg_type, codec_code, payload
+        raise BadMagic(f"bad frame magic {magic!r}")
+    if ver == V1:
+        flags = 0                    # v1's reserved byte carries no meaning
+    elif ver == VERSION:
+        if flags & ~_KNOWN_FLAGS:
+            raise BadVersion(f"unknown v{ver} flag bits 0x{flags:02x}")
+    else:
+        raise BadVersion(f"unsupported frame version {ver}")
+    crc = bool(flags & FLAG_CHECKSUM)
+    expect = HEADER_BYTES + plen + (CRC_BYTES if crc else 0)
+    if len(wire) < expect:
+        raise TruncatedFrame(f"frame length {len(wire)} < expected {expect}")
+    if len(wire) != expect:
+        raise LengthMismatch(
+            f"frame length {len(wire)} != expected {expect}")
+    if crc:
+        (got,) = struct.unpack_from("<I", wire, HEADER_BYTES + plen)
+        want = zlib.crc32(wire[:HEADER_BYTES + plen]) & 0xFFFFFFFF
+        if got != want:
+            raise ChecksumMismatch(
+                f"frame CRC32 0x{got:08x} != computed 0x{want:08x}")
+    return msg_type, codec_code, wire[HEADER_BYTES:HEADER_BYTES + plen]
+
+
+def _need(buf: bytes, off: int, n: int, what: str) -> None:
+    if off + n > len(buf):
+        raise TruncatedFrame(
+            f"payload ends inside {what}: need {n} bytes at offset {off}, "
+            f"have {len(buf) - off}")
 
 
 def _pack_array(a: np.ndarray) -> bytes:
@@ -101,43 +155,57 @@ def _pack_array(a: np.ndarray) -> bytes:
 
 
 def _unpack_array(buf: bytes, off: int) -> Tuple[np.ndarray, int]:
+    _need(buf, off, 2, "array block head")
     code, ndim = struct.unpack_from("<BB", buf, off)
     off += 2
+    if code >= len(_DTYPES):
+        raise UnknownDtype(f"array dtype code {code} outside the wire table "
+                           f"(0..{len(_DTYPES) - 1})")
+    _need(buf, off, 4 * ndim, "array dims")
     shape = struct.unpack_from(f"<{ndim}I", buf, off) if ndim else ()
     off += 4 * ndim
     dt = _DTYPES[code]
-    n = int(np.prod(shape, dtype=np.int64)) if ndim else 1
+    n = 1                            # Python ints: corrupt dims can't overflow
+    for s in shape:
+        n *= int(s)
+    _need(buf, off, n * dt.itemsize, "array data")
     a = np.frombuffer(buf, dt, count=n, offset=off).reshape(shape).copy()
     return a, off + n * dt.itemsize
 
 
-def _encode_pytree(msg_type: int, tree: Any) -> bytes:
+def _encode_pytree(msg_type: int, tree: Any, checksum: bool = False) -> bytes:
     leaves = [np.asarray(x) for x in jax.tree.leaves(tree)]
     payload = struct.pack("<I", len(leaves)) + b"".join(
         _pack_array(a) for a in leaves)
-    return _pack_header(msg_type, 0, payload)
+    return _pack_header(msg_type, 0, payload, checksum=checksum)
 
 
 def _decode_pytree(wire: bytes, expect_type: int) -> List[np.ndarray]:
     msg_type, _, payload = _unpack_header(wire)
     if msg_type != expect_type:
-        raise ValueError(f"expected msg type {expect_type}, got {msg_type}")
+        raise WrongMessageType(
+            f"expected msg type {expect_type}, got {msg_type}")
+    _need(payload, 0, 4, "leaf count")
     (n,) = struct.unpack_from("<I", payload, 0)
     off, leaves = 4, []
     for _ in range(n):
         a, off = _unpack_array(payload, off)
         leaves.append(a)
+    if off != len(payload):
+        raise LengthMismatch(
+            f"{len(payload) - off} trailing bytes after the last leaf")
     return leaves
 
 
-def pytree_frame_nbytes(tree: Any) -> int:
+def pytree_frame_nbytes(tree: Any, checksum: bool = False) -> int:
     """Exact byte length of the WeightBroadcast/UpperUpdate frame for
     ``tree`` WITHOUT serializing it: the frame is a pure function of leaf
     shapes/dtypes (header + leaf count + per-leaf dtype/ndim/dims head +
-    raw bytes), so ledger charging needs no device->host copy of the
-    weights. Kept equal to ``len(_encode_pytree(...))`` by construction
-    (asserted in tests/test_transport.py)."""
-    total = HEADER_BYTES + 4
+    raw bytes + the 4-byte CRC trailer when ``checksum``), so ledger
+    charging needs no device->host copy of the weights. Kept equal to
+    ``len(_encode_pytree(...))`` by construction (asserted in
+    tests/test_transport.py)."""
+    total = HEADER_BYTES + 4 + (CRC_BYTES if checksum else 0)
     for a in jax.tree.leaves(tree):
         if not hasattr(a, "ndim") or not hasattr(a, "dtype"):
             a = np.asarray(a)
@@ -160,8 +228,8 @@ class WeightBroadcast:
 
     MSG_TYPE = MSG_WEIGHT_BROADCAST
 
-    def encode(self) -> bytes:
-        return _encode_pytree(self.MSG_TYPE, self.params)
+    def encode(self, checksum: bool = False) -> bytes:
+        return _encode_pytree(self.MSG_TYPE, self.params, checksum=checksum)
 
     @classmethod
     def decode(cls, wire: bytes) -> List[np.ndarray]:
@@ -178,8 +246,8 @@ class UpperUpdate:
 
     MSG_TYPE = MSG_UPPER_UPDATE
 
-    def encode(self) -> bytes:
-        return _encode_pytree(self.MSG_TYPE, self.params)
+    def encode(self, checksum: bool = False) -> bytes:
+        return _encode_pytree(self.MSG_TYPE, self.params, checksum=checksum)
 
     @classmethod
     def decode(cls, wire: bytes) -> List[np.ndarray]:
@@ -201,7 +269,7 @@ class SelectedKnowledge:
 
     MSG_TYPE = MSG_SELECTED_KNOWLEDGE
 
-    def encode(self) -> bytes:
+    def encode(self, checksum: bool = False) -> bytes:
         labels = np.asarray(self.labels)
         valid = np.asarray(self.valid).astype(bool)
         shape = tuple(self.acts.shape)
@@ -219,7 +287,7 @@ class SelectedKnowledge:
         head += struct.pack("<H", len(params)) + params
         head += np.ascontiguousarray(labels[valid]).tobytes()
         return _pack_header(self.MSG_TYPE, self.codec.code,
-                            head + payload_rows)
+                            head + payload_rows, checksum=checksum)
 
     @classmethod
     def decode(cls, wire: bytes):
@@ -228,33 +296,54 @@ class SelectedKnowledge:
         received, ready for MetaTraining. (The invalid slots never crossed
         the wire, so the reconstruction is the valid rows — the server
         trains on what arrived, which also keeps junk slots out of the
-        upper model's batch statistics.)"""
+        upper model's batch statistics.)
+
+        Every malformation raises a ``FrameError`` subclass: offsets are
+        bounds-checked before each read (``TruncatedFrame``), the bitmap
+        popcount must equal the declared valid count and the codec's row
+        payload must be exactly the bytes the row count implies
+        (``LengthMismatch``), unknown codec/dtype codes get their typed
+        errors — corrupted frames never escape as ``struct.error`` /
+        ``IndexError`` / numpy ``ValueError``."""
         msg_type, codec_code, payload = _unpack_header(wire)
         if msg_type != cls.MSG_TYPE:
-            raise ValueError(f"expected SelectedKnowledge, got {msg_type}")
+            raise WrongMessageType(
+                f"expected SelectedKnowledge, got {msg_type}")
         codec = codec_by_code(codec_code)
+        _need(payload, 0, 9, "knowledge head")
         ck, nvalid, ndim = struct.unpack_from("<IIB", payload, 0)
         off = 9
+        _need(payload, off, 4 * ndim, "map shape")
         map_shape = struct.unpack_from(f"<{ndim}I", payload, off)
         off += 4 * ndim
+        _need(payload, off, 1, "label dtype code")
         (lab_code,) = struct.unpack_from("<B", payload, off)
         off += 1
+        if lab_code >= len(_DTYPES):
+            raise UnknownDtype(f"label dtype code {lab_code} outside the "
+                               f"wire table (0..{len(_DTYPES) - 1})")
         nbitmap = (ck + 7) // 8
+        _need(payload, off, nbitmap, "validity bitmap")
         valid = np.unpackbits(
             np.frombuffer(payload, np.uint8, nbitmap, off),
             count=ck).astype(bool)
         off += nbitmap
         if int(valid.sum()) != nvalid:   # before nvalid slices labels/rows
-            raise ValueError(
+            raise LengthMismatch(
                 f"frame bitmap popcount {int(valid.sum())} != {nvalid}")
+        _need(payload, off, 2, "codec param length")
         (nparams,) = struct.unpack_from("<H", payload, off)
         off += 2
+        _need(payload, off, nparams, "codec params")
         params = payload[off:off + nparams]
         off += nparams
         lab_dt = _DTYPES[lab_code]
+        _need(payload, off, nvalid * lab_dt.itemsize, "labels")
         labels = np.frombuffer(payload, lab_dt, nvalid, off).copy()
         off += nvalid * lab_dt.itemsize
-        d = int(np.prod(map_shape, dtype=np.int64)) if ndim else 1
+        d = 1                            # Python ints: no corrupt-dim overflow
+        for s in map_shape:
+            d *= int(s)
         rows = codec.decode(payload[off:], nvalid, d, params)
         acts = rows.reshape((nvalid,) + tuple(map_shape))
         return (jnp.asarray(acts), jnp.asarray(labels),

@@ -1,0 +1,482 @@
+"""Fault-tolerant runtime tests: typed frame errors (the pre-fix decoder
+crash modes), decoder fuzzing, deterministic fault injection, graceful
+partial rounds, retransmit accounting, quarantine, and the zero-fault
+bit-identity guarantee across engines."""
+import dataclasses
+import struct
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import FLConfig, get_wrn_config
+from repro.core.rounds import client_round, server_round
+from repro.data import SyntheticImageDataset, partition_k_shards
+from repro.fl.comms import CommLedger
+from repro.fl.faults import (FATE_CRASH_AFTER_SELECT,
+                             FATE_CRASH_BEFORE_UPLOAD, FATE_OK, FaultPlan,
+                             FaultyChannel)
+from repro.fl.server import FLServer
+from repro.fl.simulation import FLSimulation
+from repro.fl.transport import (Channel, FrameError, SelectedKnowledge,
+                                TruncatedFrame, UnknownDtype, UpperUpdate,
+                                get_codec)
+from repro.fl.transport.messages import HEADER_BYTES, MAGIC, V1, VERSION
+from repro.models.wrn import make_split_wrn
+
+
+@pytest.fixture(scope="module")
+def setting():
+    cfg = get_wrn_config().reduced()
+    model = make_split_wrn(cfg)
+    train = SyntheticImageDataset(400, image_size=cfg.image_size, seed=0)
+    test = SyntheticImageDataset(100, image_size=cfg.image_size, seed=1)
+    clients = partition_k_shards(train, 4, k_classes=2,
+                                 samples_per_client=40)
+    return model, clients, test
+
+
+def _flcfg(**kw):
+    base = dict(num_clients=4, clients_per_round=4, local_batch_size=20,
+                pca_components=8, clusters_per_class=3, kmeans_iters=4,
+                meta_epochs=1, meta_batch_size=10)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _params():
+    return {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.float32(2.0)}
+
+
+def _knowledge_frame(checksum=False, codec="raw_f32"):
+    rng = np.random.default_rng(0)
+    acts = rng.normal(size=(6, 2, 3)).astype(np.float32)
+    labels = np.arange(6, dtype=np.int32)
+    valid = np.array([1, 1, 0, 1, 0, 1], bool)
+    msg = SelectedKnowledge(acts, labels, valid, get_codec(codec))
+    return msg.encode(checksum=checksum), (acts, labels, valid)
+
+
+class TestFrameErrorRegressions:
+    """The three decoder crash modes that used to escape as raw
+    struct.error / IndexError / numpy ValueError — each must now be a
+    typed FrameError (and FrameError must still be a ValueError, so
+    pre-hierarchy callers keep working)."""
+
+    def test_short_wire_is_truncated_frame_not_struct_error(self):
+        # pre-fix: struct.error from _HEADER.unpack on a sub-header buffer
+        wire = UpperUpdate(_params()).encode()
+        for cut in (0, 3, HEADER_BYTES - 1):
+            with pytest.raises(TruncatedFrame):
+                UpperUpdate.decode(wire[:cut])
+
+    def test_bad_dtype_code_is_unknown_dtype_not_index_error(self):
+        # pre-fix: IndexError from _DTYPES[code] on a corrupt dtype byte.
+        # Payload = leaf-count u32 then the first leaf's dtype code byte.
+        wire = bytearray(UpperUpdate(_params()).encode())
+        wire[HEADER_BYTES + 4] = 200
+        with pytest.raises(UnknownDtype):
+            UpperUpdate.decode(bytes(wire))
+
+    def test_undersized_array_data_is_truncated_frame_not_numpy_error(self):
+        # pre-fix: numpy ValueError from frombuffer on a buffer smaller
+        # than the dims promise. Handcraft a frame whose header length is
+        # consistent but whose one (100,) f32 leaf has only 8 data bytes.
+        payload = (struct.pack("<I", 1)               # leaf count
+                   + struct.pack("<BB", 0, 1)         # f32, ndim 1
+                   + struct.pack("<I", 100)           # dims
+                   + b"\x00" * 8)                     # 8 of 400 bytes
+        frame = struct.Struct("<4sBBBBI").pack(
+            MAGIC, VERSION, UpperUpdate.MSG_TYPE, 0, 0, len(payload)
+        ) + payload
+        with pytest.raises(TruncatedFrame):
+            UpperUpdate.decode(frame)
+
+    def test_frame_errors_are_value_errors(self):
+        with pytest.raises(ValueError):
+            UpperUpdate.decode(b"FL")
+
+
+class TestV1Compat:
+    def test_v1_frame_still_decodes(self):
+        """A version-1 frame (reserved byte, no trailer) must parse under
+        the v2 decoder: patch the version byte — layout is otherwise
+        identical when no checksum is present."""
+        wire, (acts, labels, valid) = _knowledge_frame(checksum=False)
+        v1 = bytearray(wire)
+        assert v1[4] == VERSION
+        v1[4] = V1
+        a, l, v = SelectedKnowledge.decode(bytes(v1))
+        np.testing.assert_array_equal(np.asarray(l), labels[valid])
+        np.testing.assert_allclose(np.asarray(a),
+                                   acts[valid].reshape(int(valid.sum()),
+                                                       2, 3))
+
+    def test_v1_ignores_flag_bits_v2_rejects_unknown(self):
+        from repro.fl.transport import BadVersion
+        wire = bytearray(_knowledge_frame(checksum=False)[0])
+        wire[7] = 0x80                   # unknown flag bit
+        with pytest.raises(BadVersion):
+            SelectedKnowledge.decode(bytes(wire))
+        wire[4] = V1                     # v1: reserved byte, no meaning
+        SelectedKnowledge.decode(bytes(wire))
+
+
+class TestDecoderFuzz:
+    """Property: random byte mutations of a valid frame either decode to
+    the ORIGINAL payload or raise a FrameError — never any other
+    exception. With checksums on, a successful decode additionally implies
+    the payload is bit-exact (no silent wrong payload)."""
+
+    def _mutate(self, wire: bytes, rng) -> bytes:
+        buf = bytearray(wire)
+        for _ in range(int(rng.integers(1, 5))):
+            pos = int(rng.integers(0, len(buf)))
+            buf[pos] ^= int(rng.integers(1, 256))
+        return bytes(buf)
+
+    def _check(self, wire, mutated, reference_decode, decode, strict):
+        try:
+            out = decode(mutated)
+        except FrameError:
+            return
+        ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+                 for a, b in zip(reference_decode, out))
+        if strict:
+            assert ok, "checksummed frame decoded to a WRONG payload"
+
+    @settings(max_examples=60)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_mutated_frames_never_crash(self, seed):
+        rng = np.random.default_rng(seed)
+        for checksum in (False, True):
+            for codec in ("raw_f32", "int8"):
+                wire, _ = _knowledge_frame(checksum=checksum, codec=codec)
+                ref = SelectedKnowledge.decode(wire)
+                self._check(wire, self._mutate(wire, rng), ref,
+                            SelectedKnowledge.decode, strict=checksum)
+            wire = UpperUpdate(_params()).encode(checksum=checksum)
+            ref = UpperUpdate.decode(wire)
+            self._check(wire, self._mutate(wire, rng), ref,
+                        UpperUpdate.decode, strict=checksum)
+
+    @settings(max_examples=40)
+    @given(cut=st.integers(min_value=0, max_value=10_000))
+    def test_truncations_never_crash(self, cut):
+        wire, _ = _knowledge_frame(checksum=True)
+        cut = cut % len(wire)
+        with pytest.raises(FrameError):
+            SelectedKnowledge.decode(wire[:cut])
+
+
+class TestFaultDeterminism:
+    def test_same_seed_same_faults_any_call_order(self):
+        """The fault schedule is a function of (seed, round, client,
+        stream) — NOT of the order the engine happens to deliver frames
+        in, which is what keeps sequential/batched/distributed runs
+        identical under injection."""
+        plan = FaultPlan(drop_rate=0.25, late_crash_rate=0.15,
+                         bitflip_rate=0.3, truncate_rate=0.1,
+                         duplicate_rate=0.1)
+        p = _params()
+        ch1 = FaultyChannel(CommLedger(), plan, seed=9)
+        ch2 = FaultyChannel(CommLedger(), plan, seed=9)
+        for t in range(3):
+            ch1.begin_round(t)
+            ch2.begin_round(t)
+            ids = list(range(10))
+            for cid in ids:                       # forward order
+                ch1.upload_update(cid, p)
+            for cid in reversed(ids):             # reverse order
+                ch2.upload_update(cid, p)
+            s1, s2 = ch1.round_stats(), ch2.round_stats()
+            # backoff_s is a float accumulator: delivery order changes the
+            # summation order, so it is only equal to float addition error.
+            assert s1.pop("backoff_s") == pytest.approx(s2.pop("backoff_s"))
+            assert s1 == s2
+            for cid in ids:
+                assert ch1.client_fate(cid) == ch2.client_fate(cid)
+                assert (ch1.update_arrived(cid)
+                        == ch2.update_arrived(cid))
+        assert ch1.ledger.summary() == ch2.ledger.summary()
+
+    def test_fates_partition_by_rate(self):
+        plan = FaultPlan(drop_rate=1.0)
+        ch = FaultyChannel(CommLedger(), plan, seed=0)
+        assert all(ch.client_fate(c) == FATE_CRASH_BEFORE_UPLOAD
+                   for c in range(5))
+        plan = FaultPlan(late_crash_rate=1.0)
+        ch = FaultyChannel(CommLedger(), plan, seed=0)
+        assert all(ch.client_fate(c) == FATE_CRASH_AFTER_SELECT
+                   for c in range(5))
+        ch = FaultyChannel(CommLedger(), FaultPlan(), seed=0)
+        assert all(ch.client_fate(c) == FATE_OK for c in range(5))
+
+
+class TestRetransmitAccounting:
+    def test_detected_corruption_charges_retransmit_category(self):
+        """Always-truncated wire, budget of 2 retries: attempt 0 bills the
+        frame's own category once, both retries bill ``retransmit`` at the
+        full frame size, the frame is LOST (arrival False), and the
+        summary exposes the overhead."""
+        plan = FaultPlan(truncate_rate=1.0, max_retries=2)
+        led = CommLedger()
+        ch = FaultyChannel(led, plan, seed=0, checksum=True)
+        p = _params()
+        nbytes = len(UpperUpdate(p).encode(checksum=True))
+        assert ch.upload_update(0, p) is False
+        assert not ch.update_arrived(0)
+        assert led.up["weights"] == nbytes
+        assert led.up["retransmit"] == 2 * nbytes
+        assert led.summary()["retransmit_up"] == 2 * nbytes
+        s = ch.round_stats()
+        assert s == {"corruptions_detected": 3, "retransmits": 2,
+                     "duplicates": 0, "silent_corruptions": 0,
+                     "injected_corruptions": 3, "lost_frames": 1,
+                     "backoff_s": pytest.approx(0.05 * (1 + 2))}
+
+    def test_crash_before_upload_charges_nothing(self):
+        led = CommLedger()
+        ch = FaultyChannel(led, FaultPlan(drop_rate=1.0), seed=0)
+        assert ch.upload_update(3, _params()) is False
+        acts = np.zeros((2, 3), np.float32)
+        assert ch.upload_knowledge(3, acts, np.zeros(2, np.int32),
+                                   np.ones(2, bool),
+                                   get_codec("raw_f32")) is None
+        assert led.total_up == 0
+
+    def test_crash_after_select_delivers_knowledge_only(self):
+        led = CommLedger()
+        ch = FaultyChannel(led, FaultPlan(late_crash_rate=1.0), seed=0)
+        acts = np.zeros((2, 3), np.float32)
+        out = ch.upload_knowledge(1, acts, np.zeros(2, np.int32),
+                                  np.ones(2, bool), get_codec("raw_f32"))
+        assert out is not None
+        assert led.up["metadata"] > 0
+        assert ch.upload_update(1, _params()) is False
+        assert "weights" not in led.up
+
+
+class TestZeroFaultIdentity:
+    def test_zero_plan_ledger_matches_perfect_channel(self):
+        ledA, ledB = CommLedger(), CommLedger()
+        chA = FaultyChannel(ledA, FaultPlan(), seed=0, checksum=False)
+        chB = Channel(ledB, checksum=False)
+        p = _params()
+        acts = np.random.default_rng(0).normal(size=(4, 5)).astype(
+            np.float32)
+        for cid in range(3):
+            chA.upload_update(cid, p)
+            chB.upload_update(cid, p)
+            chA.upload_knowledge(cid, acts, np.zeros(4, np.int32),
+                                 np.ones(4, bool), get_codec("int8"))
+            chB.upload_knowledge(cid, acts, np.zeros(4, np.int32),
+                                 np.ones(4, bool), get_codec("int8"))
+        chA.broadcast_weights(p, 3)
+        chB.broadcast_weights(p, 3)
+        assert ledA.summary() == ledB.summary()
+        assert chA.round_stats() == chB.round_stats()
+
+    def test_checksum_frames_cost_exactly_4_bytes_more(self):
+        p = _params()
+        on = Channel(CommLedger(), checksum=True)
+        off = Channel(CommLedger(), checksum=False)
+        on.upload_update(0, p)
+        off.upload_update(0, p)
+        assert on.ledger.up["weights"] == off.ledger.up["weights"] + 4
+
+    @pytest.mark.chaos
+    def test_simulation_zero_plan_bit_identical(self, setting):
+        """A simulation handed an all-zero FaultPlan must be bit-identical
+        — accuracy, metadata counts, full ledger — to one with no fault
+        layer at all."""
+        model, clients, test = setting
+        r1 = FLSimulation(model, clients, test, _flcfg(),
+                          seed=0).run(rounds=2)
+        r2 = FLSimulation(model, clients, test, _flcfg(), seed=0,
+                          fault_plan=FaultPlan(), fault_seed=7,
+                          quarantine_after=3).run(rounds=2)
+        assert r1.test_acc == r2.test_acc
+        assert r1.fedavg_acc == r2.fedavg_acc
+        assert r1.metadata_counts == r2.metadata_counts
+        assert r1.comm == r2.comm
+        assert r2.drops == [0, 0]
+        assert r2.retransmits == [0, 0]
+        assert r2.quarantined == [0, 0]
+
+
+class TestPartialRounds:
+    def test_lost_knowledge_frames_are_skipped(self, setting):
+        """server_round aggregates over exactly the metadata that ARRIVED:
+        None entries (crashed clients / exhausted retries) don't crash the
+        concatenate and don't count."""
+        model, clients, test = setting
+        cfg = _flcfg()
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        _, upper0 = model.split(params)
+        led = CommLedger()
+        k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+        p1, m1, _ = client_round(model, params, clients[0], cfg, k1, led,
+                                 test.num_classes)
+        p2, m2, _ = client_round(model, params, clients[1], cfg, k2, led,
+                                 test.num_classes)
+        full = server_round(model, params, upper0, [p1, p2], [m1, m2],
+                            cfg, key)
+        part = server_round(model, params, upper0, [p1, p2], [m1, None],
+                            cfg, key)
+        assert part.metadata_count == int(np.asarray(m1[2]).sum())
+        assert part.metadata_count < full.metadata_count
+
+    def test_nothing_arrived_keeps_global_and_upper(self, setting):
+        """The degenerate round — every update lost, every knowledge frame
+        lost — must keep W_G(t-1) and W_G^u(0) instead of averaging
+        nothing / dividing by zero."""
+        model, clients, test = setting
+        cfg = _flcfg()
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        _, upper0 = model.split(params)
+        res = server_round(model, params, upper0, [params, params],
+                           [None, None], cfg, key,
+                           fedavg_weights=[0.0, 0.0])
+        assert res.metadata_count == 0
+        for a, b in zip(jax.tree.leaves(res.global_params),
+                        jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(res.upper_trained),
+                        jax.tree.leaves(upper0)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_aggregate_combines_straggler_and_arrival_masks(self, setting):
+        model, clients, test = setting
+        cfg = _flcfg()
+        params = model.init(jax.random.PRNGKey(0))
+        _, upper0 = model.split(params)
+        srv = FLServer(model, params, upper0, cfg)
+        # distinct per-client params so the weighting is observable
+        cp = [jax.tree.map(lambda a, i=i: a + np.float32(i), params)
+              for i in range(3)]
+        key = jax.random.PRNGKey(2)
+        rr = srv.aggregate(cp, [None, None, None], key,
+                           stragglers=np.array([True, False, False]),
+                           arrived=np.array([True, True, False]))
+        # only client 1 counts: average == its params exactly
+        for a, b in zip(jax.tree.leaves(rr.global_params),
+                        jax.tree.leaves(cp[1])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+class TestStragglerMaskUnit:
+    """Direct unit coverage of FLServer.straggler_mask, including the
+    all-stragglers degenerate path (simulation-level coverage lives in
+    test_fl_accounting.py)."""
+
+    def _server(self, deadline):
+        return FLServer(None, None, None, _flcfg(), deadline=deadline)
+
+    def test_no_deadline_is_none(self):
+        assert self._server(None).straggler_mask([1.0, 99.0]) is None
+
+    def test_nobody_late_is_none(self):
+        assert self._server(10.0).straggler_mask([1.0, 2.0]) is None
+
+    def test_everybody_late_degenerates_to_waiting(self):
+        assert self._server(1.0).straggler_mask([2.0, 3.0, 4.0]) is None
+
+    def test_some_late_masks_exactly_the_late(self):
+        mask = self._server(2.5).straggler_mask([1.0, 3.0, 2.0, 9.0])
+        np.testing.assert_array_equal(mask, [False, True, False, True])
+
+
+class TestQuarantine:
+    def _server(self, **kw):
+        return FLServer(None, None, None, _flcfg(clients_per_round=3),
+                        **kw)
+
+    def test_no_quarantine_keeps_exact_sampling_stream(self):
+        srv = self._server(quarantine_after=3)
+        key = jax.random.PRNGKey(5)
+        expected = np.asarray(
+            jax.random.choice(key, 10, (3,), replace=False))
+        np.testing.assert_array_equal(srv.sample_clients(10, key),
+                                      expected)
+
+    def test_streak_trips_quarantine_and_cooldown_readmits(self):
+        srv = self._server(quarantine_after=2, quarantine_cooldown=2)
+        srv.round_idx = 1
+        srv.record_arrivals([0, 1], [False, True])      # streak 0 -> 1
+        assert srv.eligible_clients(4) == [0, 1, 2, 3]
+        srv.round_idx = 2
+        srv.record_arrivals([0, 1], [False, True])      # streak 2: trip
+        assert srv.eligible_clients(4) == [1, 2, 3]
+        assert srv.num_quarantined(4) == 1
+        srv.round_idx = 3                                # still serving
+        assert 0 not in srv.eligible_clients(4)
+        srv.round_idx = 4                                # cooldown over
+        assert srv.eligible_clients(4) == [0, 1, 2, 3]  # re-admitted
+        # sampling over 3 eligible of 4 never picks the quarantined one
+        srv.round_idx = 3
+        for s in range(5):
+            idx = srv.sample_clients(4, jax.random.PRNGKey(s))
+            assert 0 not in idx and len(idx) == 3
+
+    def test_arrival_clears_streak_and_quarantine(self):
+        srv = self._server(quarantine_after=2, quarantine_cooldown=9)
+        srv.record_arrivals([5], [False])
+        srv.record_arrivals([5], [False])
+        assert srv.num_quarantined(6) == 1
+        srv.record_arrivals([5], [True])                # delivered: clear
+        assert srv.num_quarantined(6) == 0
+        assert srv.fail_streak == {}
+
+
+@pytest.mark.chaos
+class TestChaosSimulation:
+    """Small end-to-end chaos runs: the simulator survives injected
+    faults, counts them, and the engines agree under the same plan."""
+
+    PLAN = FaultPlan(drop_rate=0.3, late_crash_rate=0.1, bitflip_rate=0.2,
+                     truncate_rate=0.1, duplicate_rate=0.05)
+
+    def test_faulty_run_counts_and_recovers(self, setting):
+        model, clients, test = setting
+        sim = FLSimulation(model, clients, test,
+                           _flcfg(transport_checksum=True), seed=0,
+                           fault_plan=self.PLAN, fault_seed=3,
+                           quarantine_after=2, quarantine_cooldown=2)
+        res = sim.run(rounds=4)
+        assert len(res.test_acc) == 4 and all(
+            np.isfinite(a) for a in res.test_acc)
+        assert len(res.drops) == len(res.retransmits) == 4
+        assert sum(res.drops) > 0
+        assert sum(res.corruptions_detected) > 0
+        assert res.comm["retransmit_up"] > 0
+        # checksums on: injected corruption is NEVER silently consumed
+        assert sim.channel.total_silent_corruptions == 0
+        assert (sum(res.corruptions_detected)
+                == sim.channel.total_injected_corruptions)
+
+    def test_engines_agree_under_identical_faults(self, setting):
+        """Sequential and distributed engines under the SAME FaultPlan
+        and seeds: identical accuracy trajectory, fault counters and
+        ledger — injected faults are keyed on (round, client), not on
+        engine call order."""
+        model, clients, test = setting
+        runs = []
+        for distributed in (False, True):
+            sim = FLSimulation(
+                model, clients, test,
+                _flcfg(transport_checksum=True,
+                       distributed_selection=distributed), seed=0,
+                fault_plan=self.PLAN, fault_seed=3)
+            runs.append(sim.run(rounds=2))
+        a, b = runs
+        assert a.test_acc == b.test_acc
+        assert a.drops == b.drops
+        assert a.retransmits == b.retransmits
+        assert a.corruptions_detected == b.corruptions_detected
+        assert a.comm == b.comm
