@@ -8,7 +8,7 @@ degradation + recovery overhead under injected faults), all tracked PR
 over PR.
 
   PYTHONPATH=src python -m benchmarks.run \\
-      [--only tables|kernels|comms|selection|faults]
+      [--only tables|kernels|comms|selection|faults|analysis]
 """
 from __future__ import annotations
 
@@ -108,6 +108,34 @@ def run_selection(results):
     return report
 
 
+def run_analysis_bench(results):
+    """flcheck wall time: embedded self-test fixtures + the full src/
+    scan. The scan must stay under 10 s so the CI gate stays cheap."""
+    from repro.analysis import run_analysis
+    from repro.analysis.selftest import FIXTURES, run_self_test
+    print("# static analysis (flcheck self-test + full src/ scan)")
+    t0 = time.time()
+    failures = run_self_test()
+    t_self = time.time() - t0
+    t0 = time.time()
+    findings = run_analysis(["src", "benchmarks"])
+    t_scan = time.time() - t0
+    rows = [
+        ("analysis_selftest_s", t_self,
+         f"{len(FIXTURES) - len(failures)}/{len(FIXTURES)} fixtures ok"),
+        ("analysis_scan_s", t_scan,
+         f"{len(findings)} finding(s), budget 10s"),
+        ("analysis_scan_under_budget", float(t_scan < 10.0), "PASS if 1"),
+        ("analysis_selftest_ok", float(not failures), "PASS if 1"),
+    ]
+    _emit(rows)
+    results["analysis"] = {"selftest_s": t_self, "scan_s": t_scan,
+                           "fixtures": len(FIXTURES),
+                           "fixture_failures": failures,
+                           "findings": len(findings)}
+    return rows
+
+
 def run_kernels(results):
     from benchmarks import kernel_bench as K
     print("# kernel micro-benchmarks (jnp oracle on CPU + v5e roofline est.)")
@@ -124,7 +152,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "tables", "kernels", "comm", "comms",
-                             "selection", "faults"])
+                             "selection", "faults", "analysis"])
     args = ap.parse_args(argv)
 
     results = {}
@@ -137,6 +165,8 @@ def main(argv=None) -> None:
         run_faults(results)
     if args.only in (None, "kernels"):
         run_kernels(results)
+    if args.only in (None, "analysis"):
+        run_analysis_bench(results)
     claims = {}
     if args.only in (None, "tables"):
         claims = run_tables(results)

@@ -36,7 +36,8 @@ def main():
 
     for rnd in range(3):
         client_params, metadatas = [], []
-        for c in clients:
+        k_round = jax.random.fold_in(key, rnd)
+        for ci, c in enumerate(clients):
             toks = jnp.asarray(c.data.x)
             # LocalUpdate (§3.2)
             bs = 16
@@ -48,7 +49,11 @@ def main():
             client_params.append(p)
             # Extract&Selection (§3.1) on mean-pooled split-layer hiddens
             acts = model.apply_lower(params, toks)          # (N, T, d)
-            sel = select_metadata(acts.mean(1), None, jax.random.fold_in(key, rnd),
+            # per-client key: one fold per (round, client) — a shared
+            # round key would give every client the same kmeans init
+            # stream and correlate their selections (flcheck RNG004)
+            sel = select_metadata(acts.mean(1), None,
+                                  jax.random.fold_in(k_round, ci),
                                   per_class=False, clusters_per_class=6,
                                   pca_components=16, kmeans_iters=10)
             metadatas.append((jnp.take(acts, sel.indices, 0),

@@ -1,0 +1,28 @@
+"""repro.analysis — flcheck, the repo-native static checker.
+
+Rule families (see each module's docstring for the full contract):
+
+* RNG001–RNG004  PRNG key discipline            (repro.analysis.rng)
+* PUR001–PUR004  tracer safety in jitted code    (repro.analysis.purity)
+* PAL001–PAL004  Pallas BlockSpec tiling + VMEM  (repro.analysis.pallas_rules)
+* LED001–LED004  byte-true ledger / wire audit   (repro.analysis.ledger)
+* SUP001         reason-less inline suppression  (repro.analysis.core)
+
+Run ``python -m repro.analysis src benchmarks`` (exit 0 against the
+checked-in ``analysis_baseline.json``) or ``--self-test`` for the embedded
+known-bad/known-good fixtures.
+"""
+from repro.analysis.core import (Finding, Module, fingerprints,
+                                 load_baseline, new_findings, run_analysis,
+                                 write_baseline)
+
+RULE_IDS = (
+    "RNG001", "RNG002", "RNG003", "RNG004",
+    "PUR001", "PUR002", "PUR003", "PUR004",
+    "PAL001", "PAL002", "PAL003", "PAL004",
+    "LED001", "LED002", "LED003", "LED004",
+    "SUP001",
+)
+
+__all__ = ["Finding", "Module", "RULE_IDS", "fingerprints", "load_baseline",
+           "new_findings", "run_analysis", "write_baseline"]

@@ -1,0 +1,123 @@
+"""flcheck CLI.
+
+    python -m repro.analysis [paths...]            # scan (default: src benchmarks)
+    python -m repro.analysis --against-baseline analysis_baseline.json
+    python -m repro.analysis --write-baseline analysis_baseline.json
+    python -m repro.analysis --self-test
+    python -m repro.analysis --list-rules
+
+Exit codes: 0 clean (or nothing new vs. baseline), 1 findings / self-test
+failure, 2 usage error.  With no --against/--write flag, an
+``analysis_baseline.json`` in the working directory is used automatically
+when present.  SUP001 (reason-less suppression) is never grandfathered.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.analysis import RULE_IDS, core
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="flcheck: RNG / tracer / Pallas-tiling / ledger "
+                    "static checks")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories (default: src benchmarks)")
+    ap.add_argument("--against-baseline", metavar="FILE",
+                    help="fail only on findings not in FILE")
+    ap.add_argument("--write-baseline", metavar="FILE",
+                    help="write current findings to FILE and exit 0")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the embedded known-bad/known-good fixtures")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--include-tests", action="store_true",
+                    help="also scan tests/ directories and test_*.py files")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any analysis_baseline.json in cwd")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in RULE_IDS:
+            print(r)
+        return 0
+
+    if args.self_test:
+        from repro.analysis.selftest import FIXTURES, run_self_test
+        t0 = time.time()
+        failures = run_self_test(verbose=not args.as_json)
+        dt = time.time() - t0
+        print(f"self-test: {len(FIXTURES) - len(failures)}/{len(FIXTURES)} "
+              f"fixtures ok in {dt:.2f}s")
+        for msg in failures:
+            print(f"  FAIL {msg}", file=sys.stderr)
+        return 1 if failures else 0
+
+    root = os.getcwd()
+    paths = args.paths or ["src", "benchmarks"]
+    for p in paths:
+        ap_ = p if os.path.isabs(p) else os.path.join(root, p)
+        if not os.path.exists(ap_):
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+
+    t0 = time.time()
+    findings = core.run_analysis(paths, root=root,
+                                 include_tests=args.include_tests)
+    dt = time.time() - t0
+
+    if args.write_baseline:
+        # suppressionless-reason findings must never be grandfathered
+        base = [f for f in findings if f.rule != "SUP001"]
+        core.write_baseline(args.write_baseline, base, root)
+        print(f"wrote {len(base)} finding(s) to {args.write_baseline} "
+              f"({dt:.2f}s scan)")
+        sup = [f for f in findings if f.rule == "SUP001"]
+        for f in sup:
+            print(f.render(), file=sys.stderr)
+        return 1 if sup else 0
+
+    baseline_path = args.against_baseline
+    if baseline_path is None and not args.no_baseline:
+        default = os.path.join(root, "analysis_baseline.json")
+        if os.path.isfile(default):
+            baseline_path = default
+
+    if baseline_path:
+        try:
+            baseline = core.load_baseline(baseline_path)
+        except (OSError, ValueError) as e:
+            print(f"error: cannot read baseline {baseline_path}: {e}",
+                  file=sys.stderr)
+            return 2
+        report = core.new_findings(
+            [f for f in findings if f.rule != "SUP001"], baseline, root)
+        report += [f for f in findings if f.rule == "SUP001"]
+        label = "new finding(s) vs baseline"
+        grandfathered = len(findings) - len(report)
+    else:
+        report = findings
+        label = "finding(s)"
+        grandfathered = 0
+
+    report.sort(key=lambda f: (f.path, f.line, f.rule))
+    if args.as_json:
+        print(json.dumps([f.to_json() for f in report], indent=1))
+    else:
+        for f in report:
+            print(f.render())
+    extra = f", {grandfathered} grandfathered" if grandfathered else ""
+    print(f"flcheck: {len(report)} {label}{extra} "
+          f"({dt:.2f}s scan)", file=sys.stderr)
+    return 1 if report else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,302 @@
+"""flcheck core: file walking, findings, suppressions, baselines.
+
+The checker is pure-stdlib (``ast`` + ``tokenize``-free line scanning) so it
+runs in CI without jax installed and scans the full ``src/`` tree in well
+under the 10 s budget tracked by ``benchmarks/run.py --only analysis``.
+
+A *finding* is (rule, path, line, message, hint).  Baselines grandfather
+existing findings by a line-shift-tolerant fingerprint: the hash covers the
+rule ID, the repo-relative path and the stripped source text of the flagged
+line (plus an occurrence counter for repeated identical lines), so pure
+line-number churn does not invalidate the baseline.
+
+Inline suppressions::
+
+    some_code()  # flcheck: disable=RNG001 (same key on purpose: A/B engines)
+
+The reason string in parentheses is mandatory; a reason-less directive is
+itself a finding (SUP001) and is never honored.  A directive suppresses
+matching findings on its own line or on the line directly below it (so it
+can sit above a multi-line statement).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*flcheck:\s*disable=(?P<rules>[A-Z0-9_,\s]+?)"
+    r"(?:\s*\((?P<reason>.*)\))?\s*$"  # reason runs to the LAST ')'
+)
+
+SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "node_modules", ".venv"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative, forward slashes
+    line: int          # 1-based
+    message: str
+    hint: str = ""
+
+    def render(self) -> str:
+        s = f"{self.path}:{self.line}: {self.rule}: {self.message}"
+        if self.hint:
+            s += f"  [hint: {self.hint}]"
+        return s
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file plus everything rules need to inspect it."""
+    path: str                 # repo-relative path with forward slashes
+    abspath: str
+    source: str
+    lines: List[str]
+    tree: ast.Module
+
+    @property
+    def in_kernels_dir(self) -> bool:
+        parts = self.path.replace("\\", "/").split("/")
+        return "kernels" in parts[:-1]
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    rules: Tuple[str, ...]
+    reason: str
+
+
+def parse_suppressions(lines: Sequence[str]) -> List[Suppression]:
+    out = []
+    for i, raw in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(raw)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group("rules").split(",") if r.strip())
+        reason = (m.group("reason") or "").strip()
+        out.append(Suppression(line=i, rules=rules, reason=reason))
+    return out
+
+
+def load_module(abspath: str, root: str) -> Optional[Module]:
+    try:
+        with open(abspath, "r", encoding="utf-8") as f:
+            source = f.read()
+        tree = ast.parse(source, filename=abspath)
+    except (OSError, SyntaxError, ValueError):
+        return None
+    rel = os.path.relpath(abspath, root).replace(os.sep, "/")
+    return Module(path=rel, abspath=abspath, source=source,
+                  lines=source.splitlines(), tree=tree)
+
+
+def collect_files(paths: Sequence[str], root: str,
+                  include_tests: bool = False) -> List[str]:
+    """Expand paths (files or directories) into a sorted .py file list.
+
+    Directories named in SKIP_DIRS are pruned.  Test files (under a
+    ``tests`` directory or named ``test_*.py``) are skipped during
+    directory walks unless ``include_tests`` — a file passed explicitly is
+    always included.
+    """
+    files: List[str] = []
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap):
+            if ap.endswith(".py"):
+                files.append(ap)
+            continue
+        for dirpath, dirnames, filenames in os.walk(ap):
+            dirnames[:] = sorted(d for d in dirnames if d not in SKIP_DIRS
+                                 and not (not include_tests and d == "tests"))
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                if not include_tests and fn.startswith("test_"):
+                    continue
+                files.append(os.path.join(dirpath, fn))
+    # de-dup, preserve order
+    seen, out = set(), []
+    for f in files:
+        if f not in seen:
+            seen.add(f)
+            out.append(f)
+    return out
+
+
+def run_analysis(paths: Sequence[str], root: Optional[str] = None,
+                 include_tests: bool = False) -> List[Finding]:
+    """Run every registered rule over ``paths``; returns sorted findings.
+
+    Suppressed findings (directive with reason on the same or previous
+    line) are dropped; reason-less directives surface as SUP001.
+    """
+    from repro.analysis import ledger, pallas_rules, purity, rng
+
+    root = os.path.abspath(root or os.getcwd())
+    modules: List[Module] = []
+    for f in collect_files(paths, root, include_tests=include_tests):
+        mod = load_module(f, root)
+        if mod is not None:
+            modules.append(mod)
+
+    findings: List[Finding] = []
+    for mod in modules:
+        findings.extend(rng.check(mod))
+        findings.extend(purity.check(mod))
+        findings.extend(pallas_rules.check(mod))
+        findings.extend(ledger.check(mod))
+        findings = _apply_suppressions(mod, findings)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def _apply_suppressions(mod: Module, findings: List[Finding]) -> List[Finding]:
+    sups = parse_suppressions(mod.lines)
+    if not sups:
+        return findings
+    by_line: Dict[int, List[Suppression]] = {}
+    for s in sups:
+        by_line.setdefault(s.line, []).append(s)
+
+    kept = []
+    for f in findings:
+        if f.path != mod.path:
+            kept.append(f)
+            continue
+        # a directive on the finding line, or on the line directly above
+        candidates = by_line.get(f.line, []) + by_line.get(f.line - 1, [])
+        suppressed = any(
+            f.rule in s.rules and s.reason for s in candidates
+        )
+        if not suppressed:
+            kept.append(f)
+    for s in sups:
+        if not s.reason:
+            kept.append(Finding(
+                rule="SUP001", path=mod.path, line=s.line,
+                message="flcheck suppression without a reason string",
+                hint="write `# flcheck: disable=RULE (why this is safe)`"))
+    return kept
+
+
+# ---------------------------------------------------------------- baseline
+
+def fingerprints(findings: Iterable[Finding], root: str) -> Dict[str, Finding]:
+    """Map line-tolerant fingerprint -> finding.
+
+    Fingerprint = sha1(rule | path | stripped flagged-line text | k) where k
+    counts identical (rule, path, text) triples so two findings on
+    duplicated lines stay distinct.
+    """
+    counts: Dict[Tuple[str, str, str], int] = {}
+    out: Dict[str, Finding] = {}
+    line_cache: Dict[str, List[str]] = {}
+    for f in findings:
+        if f.path not in line_cache:
+            try:
+                with open(os.path.join(root, f.path), "r", encoding="utf-8") as fh:
+                    line_cache[f.path] = fh.read().splitlines()
+            except OSError:
+                line_cache[f.path] = []
+        lines = line_cache[f.path]
+        text = lines[f.line - 1].strip() if 0 < f.line <= len(lines) else ""
+        key = (f.rule, f.path, text)
+        k = counts.get(key, 0)
+        counts[key] = k + 1
+        h = hashlib.sha1(
+            f"{f.rule}|{f.path}|{text}|{k}".encode("utf-8")).hexdigest()[:16]
+        out[h] = f
+    return out
+
+
+def write_baseline(path: str, findings: Sequence[Finding], root: str) -> None:
+    fps = fingerprints(findings, root)
+    doc = {
+        "version": 1,
+        "tool": "flcheck",
+        "findings": [
+            {"fingerprint": fp, **f.to_json()} for fp, f in sorted(
+                fps.items(), key=lambda kv: (kv[1].path, kv[1].line, kv[1].rule))
+        ],
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
+def load_baseline(path: str) -> set:
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    return {e["fingerprint"] for e in doc.get("findings", [])}
+
+
+def new_findings(findings: Sequence[Finding], baseline_fps: set,
+                 root: str) -> List[Finding]:
+    fps = fingerprints(findings, root)
+    return [f for fp, f in fps.items() if fp not in baseline_fps]
+
+
+# ------------------------------------------------------------- AST helpers
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.random.split' for Attribute/Name chains, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def const_int(node: ast.AST, env: Optional[Dict[str, int]] = None
+              ) -> Optional[int]:
+    """Statically evaluate an int expression against a name->int env."""
+    env = env or {}
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = const_int(node.operand, env)
+        return -v if v is not None else None
+    if isinstance(node, ast.BinOp):
+        a, b = const_int(node.left, env), const_int(node.right, env)
+        if a is None or b is None:
+            return None
+        try:
+            if isinstance(node.op, ast.Mult):
+                return a * b
+            if isinstance(node.op, ast.Add):
+                return a + b
+            if isinstance(node.op, ast.Sub):
+                return a - b
+            if isinstance(node.op, ast.FloorDiv) and b:
+                return a // b
+            if isinstance(node.op, ast.Pow) and 0 <= b < 64:
+                return a ** b
+            if isinstance(node.op, ast.LShift) and 0 <= b < 64:
+                return a << b
+        except Exception:
+            return None
+    if isinstance(node, ast.Call):
+        fn = dotted_name(node.func)
+        if fn in ("min", "max") and node.args and not node.keywords:
+            vals = [const_int(a, env) for a in node.args]
+            if all(v is not None for v in vals):
+                return (min if fn == "min" else max)(vals)
+    return None

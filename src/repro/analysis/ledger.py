@@ -1,0 +1,294 @@
+"""Ledger / wire-format audit rules (LED001–LED004).
+
+The paper's 1.6% knowledge-exchange claim is only meaningful if every byte
+that crosses the simulated wire is charged to the ``CommLedger`` — these
+rules make the charging byte-true at review time (the round-0 broadcast and
+bf16-billed-as-f32 bugs both shipped before flcheck existed).
+
+LED001  a ``Message`` frame ``encode()`` call site whose enclosing function
+        never reaches a ``ledger.upload``/``download`` charge (directly or
+        through same-module calls like ``FaultyChannel._deliver``)
+LED002  a ledger charge with a category literal outside the known set
+        {metadata, weights, retransmit, duplicate}
+LED003  a ``Message`` subclass whose encode/decode struct format strings
+        are not symmetric (field-list drift — one side packs what the
+        other doesn't unpack)
+LED004  a ``Message`` subclass ``decode`` that never raises (directly or
+        via same-module helpers) a typed ``FrameError``
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, Module, dotted_name
+
+KNOWN_CATEGORIES = {"metadata", "weights", "retransmit", "duplicate"}
+CATEGORY_CONSTANTS = {"RETRANSMIT": "retransmit", "DUPLICATE": "duplicate"}
+MESSAGE_CLASS_NAMES = {"WeightBroadcast", "UpperUpdate", "SelectedKnowledge"}
+FRAME_ERRORS = {"FrameError", "TruncatedFrame", "BadMagic", "BadVersion",
+                "ChecksumMismatch", "WrongMessageType", "UnknownCodec",
+                "UnknownDtype", "LengthMismatch"}
+STRUCT_FMT_RE = re.compile(r"^[@=<>!]?[\dxcbB?hHiIlLqQnNefdspP]+$")
+MAX_DEPTH = 4
+
+
+def _message_classes(mod: Module) -> Set[str]:
+    names = set(MESSAGE_CLASS_NAMES)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef):
+            for stmt in node.body:
+                targets = []
+                if isinstance(stmt, ast.Assign):
+                    targets = stmt.targets
+                elif isinstance(stmt, ast.AnnAssign):
+                    targets = [stmt.target]
+                if any(isinstance(t, ast.Name) and t.id == "MSG_TYPE"
+                       for t in targets):
+                    names.add(node.name)
+    return names
+
+
+def _is_charge(call: ast.Call) -> bool:
+    if not isinstance(call.func, ast.Attribute):
+        return False
+    if call.func.attr not in ("upload", "download"):
+        return False
+    recv = dotted_name(call.func.value) or ""
+    return recv == "ledger" or recv.endswith(".ledger") or "ledger" in \
+        recv.split(".")[-1].lower()
+
+
+class _CallGraph:
+    """Same-module 'does this function reach a ledger charge' oracle."""
+
+    def __init__(self, mod: Module):
+        self.fns: Dict[str, ast.AST] = {}
+        for node in mod.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.fns[node.name] = node
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        # method reachable both as self.m and Class.m;
+                        # bare name kept too for cls-style calls
+                        self.fns.setdefault(sub.name, sub)
+                        self.fns[f"{node.name}.{sub.name}"] = sub
+        self._memo: Dict[Tuple[int, str], bool] = {}
+
+    def reaches(self, fn: ast.AST, predicate, depth: int = 0,
+                seen: Optional[Set[int]] = None) -> bool:
+        seen = seen if seen is not None else set()
+        if id(fn) in seen or depth > MAX_DEPTH:
+            return False
+        seen.add(id(fn))
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and predicate(node):
+                return True
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func)
+            if not d:
+                continue
+            callee = None
+            if d in self.fns:
+                callee = self.fns[d]
+            else:
+                last = d.split(".")[-1]
+                if d.startswith(("self.", "cls.")) and last in self.fns:
+                    callee = self.fns[last]
+            if callee is not None and self.reaches(callee, predicate,
+                                                   depth + 1, seen):
+                return True
+        return False
+
+    def reaches_raise(self, fn: ast.AST, error_names: Set[str],
+                      depth: int = 0,
+                      seen: Optional[Set[int]] = None) -> bool:
+        seen = seen if seen is not None else set()
+        if id(fn) in seen or depth > MAX_DEPTH:
+            return False
+        seen.add(id(fn))
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Raise) and node.exc is not None:
+                exc = node.exc
+                name = dotted_name(exc.func if isinstance(exc, ast.Call)
+                                   else exc)
+                if name and name.split(".")[-1] in error_names:
+                    return True
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func)
+            if not d:
+                continue
+            callee = self.fns.get(d) or (
+                self.fns.get(d.split(".")[-1])
+                if d.startswith(("self.", "cls.", "_")) or "." not in d
+                else None)
+            if callee is None:
+                last = d.split(".")[-1]
+                callee = self.fns.get(last)
+            if callee is not None and self.reaches_raise(
+                    callee, error_names, depth + 1, seen):
+                return True
+        return False
+
+
+def _frame_error_names(mod: Module) -> Set[str]:
+    names = set(FRAME_ERRORS)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ImportFrom) and node.module \
+                and node.module.endswith("errors"):
+            names.update(a.asname or a.name for a in node.names)
+        elif isinstance(node, ast.ClassDef):
+            bases = {dotted_name(b) for b in node.bases}
+            if any(b and b.split(".")[-1] in names for b in bases):
+                names.add(node.name)
+    return names
+
+
+def _struct_formats(fn: ast.AST) -> List[str]:
+    fmts = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        d = dotted_name(node.func) or ""
+        tail = d.split(".")[-1]
+        if tail not in ("pack", "unpack", "unpack_from", "pack_into",
+                        "calcsize", "Struct"):
+            continue
+        a0 = node.args[0]
+        if isinstance(a0, ast.Constant) and isinstance(a0.value, str) \
+                and STRUCT_FMT_RE.match(a0.value.strip()):
+            fmts.append(a0.value.strip())
+    return sorted(fmts)
+
+
+def _enclosing_functions(mod: Module) -> List[Tuple[ast.AST, List[ast.AST]]]:
+    """(function, [calls inside it, excluding nested defs' bodies])."""
+    out = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.append(node)
+    return out
+
+
+def check(mod: Module) -> List[Finding]:
+    findings: List[Finding] = []
+    msg_classes = _message_classes(mod)
+    graph = _CallGraph(mod)
+
+    # ---- LED001: frame encode must reach a charge -----------------------
+    owner: Dict[int, ast.AST] = {}  # id(call) -> enclosing function
+    for fn in _enclosing_functions(mod):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                owner.setdefault(id(node), fn)
+
+    for fn in [None] + _enclosing_functions(mod):
+        body = mod.tree if fn is None else fn
+        msg_vars: Set[str] = set()
+        for node in ast.walk(body):
+            if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                           ast.Call):
+                ctor = dotted_name(node.value.func)
+                if ctor and ctor.split(".")[-1] in msg_classes:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            msg_vars.add(t.id)
+        for node in ast.walk(body):
+            if not isinstance(node, ast.Call):
+                continue
+            if not isinstance(node.func, ast.Attribute) \
+                    or node.func.attr != "encode":
+                continue
+            enc_fn = owner.get(id(node))
+            if (fn is None) != (enc_fn is None) or \
+                    (fn is not None and enc_fn is not fn):
+                continue  # count each call site exactly once, in its owner
+            recv = node.func.value
+            is_frame = False
+            if isinstance(recv, ast.Call):
+                ctor = dotted_name(recv.func)
+                is_frame = bool(ctor) and ctor.split(".")[-1] in msg_classes
+            elif isinstance(recv, ast.Name):
+                is_frame = recv.id in msg_vars
+            if not is_frame:
+                continue
+            charged = enc_fn is not None and graph.reaches(
+                enc_fn, _is_charge)
+            if not charged:
+                where = getattr(enc_fn, "name", "<module>")
+                findings.append(Finding(
+                    rule="LED001", path=mod.path, line=node.lineno,
+                    message=("frame encode() in `%s` never reaches a "
+                             "CommLedger charge — these wire bytes are "
+                             "invisible to the accounting" % where),
+                    hint="charge len(wire) via ledger.upload/download (or "
+                         "route through Channel, which charges exactly "
+                         "the encoded frame length)"))
+
+    # ---- LED002: charge categories --------------------------------------
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and _is_charge(node)):
+            continue
+        if not node.args:
+            continue
+        cat = node.args[0]
+        value: Optional[str] = None
+        if isinstance(cat, ast.Constant) and isinstance(cat.value, str):
+            value = cat.value
+        elif isinstance(cat, ast.Name) and cat.id in CATEGORY_CONSTANTS:
+            value = CATEGORY_CONSTANTS[cat.id]
+        elif (d := dotted_name(cat)) and d.split(".")[-1] in \
+                CATEGORY_CONSTANTS:
+            value = CATEGORY_CONSTANTS[d.split(".")[-1]]
+        if value is not None and value not in KNOWN_CATEGORIES:
+            findings.append(Finding(
+                rule="LED002", path=mod.path, line=node.lineno,
+                message=(f"ledger charge category '{value}' is not one of "
+                         f"{sorted(KNOWN_CATEGORIES)} — BENCH_comms/"
+                         "BENCH_faults reports will not account for it"),
+                hint="use an existing category or register the new one in "
+                     "repro.fl.comms and the benchmark reports"))
+
+    # ---- LED003 / LED004: Message subclass contracts --------------------
+    error_names = _frame_error_names(mod)
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        has_msg_type = any(
+            isinstance(s, (ast.Assign, ast.AnnAssign)) and any(
+                isinstance(t, ast.Name) and t.id == "MSG_TYPE"
+                for t in (s.targets if isinstance(s, ast.Assign)
+                          else [s.target]))
+            for s in node.body)
+        if not has_msg_type:
+            continue
+        methods = {s.name: s for s in node.body
+                   if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        enc, dec = methods.get("encode"), methods.get("decode")
+        if enc is not None and dec is not None:
+            fe, fd = _struct_formats(enc), _struct_formats(dec)
+            if fe and fd and fe != fd:
+                findings.append(Finding(
+                    rule="LED003", path=mod.path, line=node.lineno,
+                    message=(f"`{node.name}` encode/decode struct formats "
+                             f"differ: encode packs {fe}, decode unpacks "
+                             f"{fd} — field lists have drifted"),
+                    hint="keep pack/unpack format strings in mirrored "
+                         "order; share one module-level struct.Struct"))
+        if dec is not None and not graph.reaches_raise(dec, error_names):
+            findings.append(Finding(
+                rule="LED004", path=mod.path, line=dec.lineno,
+                message=(f"`{node.name}.decode` has no typed FrameError "
+                         "path — malformed wires will surface as raw "
+                         "struct.error/IndexError"),
+                hint="validate header/lengths and raise "
+                     "repro.fl.transport.errors types (TruncatedFrame, "
+                     "WrongMessageType, ...)"))
+    return findings

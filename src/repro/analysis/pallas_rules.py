@@ -1,0 +1,231 @@
+"""Pallas tiling rules (PAL001–PAL004).
+
+TPU tiles are (sublane, lane) = (8, 128) for f32 (see
+/opt/skills/guides/pallas_guide.md): the last BlockSpec dim should be a
+multiple of 128 and the second-to-last a multiple of 8, or exactly 1
+(broadcast row/column — Mosaic pads a single row to one tile, which is the
+cheap, intentional case).  Dims that cannot be resolved statically (runtime
+shapes) are skipped, never guessed.
+
+PAL001  lane (last) block dim resolved and not 1 or a multiple of 128
+PAL002  sublane (second-to-last) block dim resolved and not 1 or a
+        multiple of 8
+PAL003  estimated VMEM residency of one grid step exceeds the ~16 MiB/core
+        budget (only when every block dim resolves; in/out blocks charged
+        twice for pipeline double-buffering)
+PAL004  a ``pl.pallas_call`` wrapper in ``kernels/`` has no interpret-mode
+        oracle ``<wrapper>_ref`` in the sibling ``ref.py``
+
+Dims are resolved against integer literals, module constants, enclosing
+function defaults, and straight-line local assignments (``min``/``max`` and
+arithmetic of resolved values fold; anything touching a runtime shape makes
+the name unresolvable).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.core import Finding, Module, const_int, dotted_name, \
+    load_module
+
+LANE = 128
+SUBLANE = 8
+VMEM_BUDGET = 16 * 1024 * 1024
+DTYPE_BYTES = {"float32": 4, "f32": 4, "int32": 4, "uint32": 4,
+               "bfloat16": 2, "float16": 2, "int8": 1, "uint8": 1,
+               "bool_": 1, "float64": 8, "int64": 8}
+
+_REF_CACHE: Dict[str, Optional[set]] = {}
+
+
+def _ref_oracle_names(mod: Module) -> Optional[set]:
+    """Top-level def names in the ref.py next to this kernels module."""
+    ref_path = os.path.join(os.path.dirname(mod.abspath), "ref.py")
+    if ref_path not in _REF_CACHE:
+        if not os.path.isfile(ref_path):
+            _REF_CACHE[ref_path] = None
+        else:
+            ref_mod = load_module(ref_path, os.path.dirname(ref_path))
+            _REF_CACHE[ref_path] = None if ref_mod is None else {
+                n.name for n in ref_mod.tree.body
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    return _REF_CACHE[ref_path]
+
+
+def _module_env(mod: Module) -> Dict[str, int]:
+    env: Dict[str, int] = {}
+    for stmt in mod.tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            v = const_int(stmt.value, env)
+            if v is not None:
+                env[stmt.targets[0].id] = v
+    return env
+
+
+def _fn_env(fndef: ast.FunctionDef, base: Dict[str, int],
+            upto_line: int) -> Dict[str, int]:
+    env = dict(base)
+    args = fndef.args
+    pos = args.posonlyargs + args.args
+    for a, d in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+        v = const_int(d, env)
+        if v is not None:
+            env[a.arg] = v
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None:
+            v = const_int(d, env)
+            if v is not None:
+                env[a.arg] = v
+    for node in ast.walk(fndef):
+        if isinstance(node, ast.Assign) and node.lineno < upto_line \
+                and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            v = const_int(node.value, env)
+            if v is not None:
+                env[name] = v
+            else:
+                env.pop(name, None)  # reassigned to something non-static
+    return env
+
+
+def _block_specs(call: ast.Call) -> List[Tuple[str, ast.Call]]:
+    """(role, BlockSpec-call) pairs from in_specs/out_specs keywords."""
+    out: List[Tuple[str, ast.Call]] = []
+    for kw in call.keywords:
+        if kw.arg not in ("in_specs", "out_specs"):
+            continue
+        role = "in" if kw.arg == "in_specs" else "out"
+        exprs = kw.value.elts if isinstance(kw.value, (ast.List, ast.Tuple)) \
+            else [kw.value]
+        for e in exprs:
+            if isinstance(e, ast.Call) and (dotted_name(e.func) or "") \
+                    .endswith("BlockSpec"):
+                out.append((role, e))
+    return out
+
+
+def _scratch_shapes(call: ast.Call) -> List[ast.Call]:
+    for kw in call.keywords:
+        if kw.arg == "scratch_shapes":
+            exprs = kw.value.elts if isinstance(kw.value,
+                                                (ast.List, ast.Tuple)) \
+                else [kw.value]
+            return [e for e in exprs if isinstance(e, ast.Call)]
+    return []
+
+
+def _shape_dims(shape: ast.expr, env: Dict[str, int]
+                ) -> Optional[List[Optional[int]]]:
+    if not isinstance(shape, (ast.Tuple, ast.List)):
+        return None
+    return [const_int(e, env) for e in shape.elts]
+
+
+def _dtype_bytes(node: Optional[ast.expr]) -> int:
+    if node is None:
+        return 4
+    d = dotted_name(node) or ""
+    for name, size in DTYPE_BYTES.items():
+        if d.endswith(name):
+            return size
+    return 4
+
+
+def _check_alignment(mod: Module, dims: List[Optional[int]], line: int,
+                     what: str, findings: List[Finding]) -> None:
+    if not dims:
+        return
+    lane = dims[-1]
+    if lane is not None and lane != 1 and lane % LANE != 0:
+        findings.append(Finding(
+            rule="PAL001", path=mod.path, line=line,
+            message=(f"{what} lane (last) dim {lane} is not a multiple of "
+                     f"{LANE} — Mosaic pads every tile, wasting VMEM and "
+                     "vector lanes"),
+            hint=f"pad the block to a multiple of {LANE} and mask the tail "
+                 "(compare against an iota like the kmeans kernels)"))
+    if len(dims) >= 2:
+        sub = dims[-2]
+        if sub is not None and sub != 1 and sub % SUBLANE != 0:
+            findings.append(Finding(
+                rule="PAL002", path=mod.path, line=line,
+                message=(f"{what} sublane dim {sub} is not 1 or a multiple "
+                         f"of {SUBLANE} (f32 tile is ({SUBLANE}, {LANE}))"),
+                hint="round the sublane dim up to 8 with a masked tail, or "
+                     "use a single broadcast row"))
+
+
+def check(mod: Module) -> List[Finding]:
+    if "pallas_call" not in mod.source:
+        return []
+    findings: List[Finding] = []
+    menv = _module_env(mod)
+    oracle_names = _ref_oracle_names(mod) if mod.in_kernels_dir else None
+
+    for top in mod.tree.body:
+        if not isinstance(top, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        has_pallas = False
+        for node in ast.walk(top):
+            if not isinstance(node, ast.Call):
+                continue
+            if not (dotted_name(node.func) or "").endswith("pallas_call"):
+                continue
+            has_pallas = True
+            env = _fn_env(top, menv, node.lineno)
+            total = 0
+            complete = True
+            for role, spec in _block_specs(node):
+                dims = _shape_dims(spec.args[0], env) if spec.args else None
+                if dims is None:
+                    complete = False
+                    continue
+                _check_alignment(mod, dims, spec.lineno,
+                                 f"{role}_spec block", findings)
+                if any(d is None for d in dims):
+                    complete = False
+                else:
+                    nelem = 1
+                    for d in dims:
+                        nelem *= d
+                    total += nelem * 4 * 2  # double-buffered pipeline stage
+            for sc in _scratch_shapes(node):
+                dims = _shape_dims(sc.args[0], env) if sc.args else None
+                if dims is None:
+                    complete = False
+                    continue
+                _check_alignment(mod, dims, sc.lineno, "scratch", findings)
+                if any(d is None for d in dims):
+                    complete = False
+                else:
+                    nelem = 1
+                    for d in dims:
+                        nelem *= d
+                    total += nelem * _dtype_bytes(
+                        sc.args[1] if len(sc.args) > 1 else None)
+            if complete and total > VMEM_BUDGET:
+                findings.append(Finding(
+                    rule="PAL003", path=mod.path, line=node.lineno,
+                    message=(f"estimated VMEM residency {total // 1024} KiB "
+                             f"exceeds the {VMEM_BUDGET // (1024 * 1024)} "
+                             "MiB/core budget"),
+                    hint="shrink block dims or move the reduction into the "
+                         "grid (two-phase pattern like quantize_affine)"))
+        if has_pallas and mod.in_kernels_dir:
+            base = top.name
+            if base.endswith("_kernel"):
+                base = base[: -len("_kernel")]
+            want = f"{base}_ref"
+            if not oracle_names or want not in oracle_names:
+                findings.append(Finding(
+                    rule="PAL004", path=mod.path, line=top.lineno,
+                    message=(f"pallas_call wrapper `{top.name}` has no "
+                             f"interpret-mode oracle `{want}` in the "
+                             "sibling ref.py"),
+                    hint="add a jnp reference implementation and assert "
+                         "bit-identity under interpret=True in tests"))
+    return findings

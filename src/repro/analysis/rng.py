@@ -1,0 +1,341 @@
+"""RNG discipline rules (RNG001–RNG004).
+
+JAX PRNG hygiene: a key is *consumed* by ``jax.random.split`` or by any
+sampler; after consumption the same variable must not be fed to another
+``jax.random`` call (derive fresh keys instead).  ``fold_in`` derives — it
+may be applied repeatedly to one parent key with different data.
+
+RNG001  key reused after ``split`` consumed it
+RNG002  key consumed by two sampler calls
+RNG003  split-result array used whole *and* aliased via a constant
+        subscript — the PR 1 ``keys[-1]`` server-key bug (server reused
+        the last client's key).  Disjoint slicing (``keys[:-1]`` +
+        ``keys[-1]``) is fine and not flagged.
+RNG004  ``jax.random`` call inside a loop with all arguments loop-invariant
+        — every iteration derives/draws the identical stream.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, Module, dotted_name
+
+SPLITTERS = {"split"}
+DERIVERS = {"fold_in", "clone"}
+SAMPLERS = {
+    "normal", "uniform", "randint", "bernoulli", "categorical", "choice",
+    "permutation", "shuffle", "gumbel", "exponential", "truncated_normal",
+    "bits", "poisson", "gamma", "beta", "dirichlet", "laplace", "logistic",
+    "cauchy", "rademacher", "orthogonal", "ball", "maxwell", "loggamma",
+    "binomial", "geometric", "rayleigh", "multivariate_normal", "triangular",
+    "chisquare",
+}
+RANDOM_FNS = SPLITTERS | DERIVERS | SAMPLERS
+
+
+def _alias_map(tree: ast.Module) -> Dict[str, str]:
+    """Local alias -> canonical dotted prefix (jax, jax.random, numpy, ...)."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                root = a.name.split(".")[0]
+                out[a.asname or root] = a.name if a.asname else root
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _canonical(dotted: str, aliases: Dict[str, str]) -> str:
+    head, _, rest = dotted.partition(".")
+    base = aliases.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def jax_random_fn(call: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    """'split' / 'normal' / ... if this is a jax.random call, else None."""
+    dotted = dotted_name(call.func)
+    if not dotted:
+        return None
+    canon = _canonical(dotted, aliases)
+    if canon.startswith("jax.random."):
+        fn = canon.rsplit(".", 1)[1]
+        return fn if fn in RANDOM_FNS or fn in ("PRNGKey", "key") else None
+    return None
+
+
+def _key_expr_name(node: ast.AST) -> Optional[str]:
+    """Dotted name of a key argument if it is a plain variable/attribute."""
+    return dotted_name(node)
+
+
+def _target_names(target: ast.AST) -> List[str]:
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out = []
+        for e in target.elts:
+            out.extend(_target_names(e))
+        return out
+    d = dotted_name(target)
+    return [d] if d else []
+
+
+class _Scope:
+    """Linear (textual-order) event stream over one function or module."""
+
+    def __init__(self, mod: Module, aliases: Dict[str, str]):
+        self.mod = mod
+        self.aliases = aliases
+        self.findings: List[Finding] = []
+        # var -> ("split"|"sampler", line) after consumption
+        self.consumed: Dict[str, Tuple[str, int]] = {}
+        # split-result arrays: var -> assign line
+        self.split_arrays: Dict[str, int] = {}
+        self.whole_uses: Dict[str, int] = {}
+        self.const_subs: Dict[str, List[int]] = {}
+
+    def run(self, body: List[ast.stmt]) -> List[Finding]:
+        for stmt in body:
+            self._stmt(stmt)
+        self._finish_aliasing()
+        return self.findings
+
+    # -- statement walk (uses before assigns, bodies in order) ------------
+
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested scopes handled separately
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            if getattr(stmt, "value", None) is not None:
+                self._expr(stmt.value)
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            rhs = getattr(stmt, "value", None)
+            for t in targets:
+                for name in _target_names(t):
+                    self._assign(name)
+            self._record_split_assign(targets, rhs)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._expr(stmt.iter)
+            for name in _target_names(stmt.target):
+                self._assign(name)
+            self._loop(stmt, stmt.body)
+            for s in stmt.body:
+                self._stmt(s)
+            for s in stmt.orelse:
+                self._stmt(s)
+        elif isinstance(stmt, ast.While):
+            self._expr(stmt.test)
+            self._loop(stmt, stmt.body)
+            for s in stmt.body:
+                self._stmt(s)
+            for s in stmt.orelse:
+                self._stmt(s)
+        elif isinstance(stmt, ast.If):
+            self._expr(stmt.test)
+            # a branch that terminates (return/raise/break/continue) is
+            # exclusive with the fall-through path: consumption inside it
+            # cannot alias later uses (`if fast_path: return f(key)` then
+            # `g(key)` is two exclusive draws, not a reuse)
+            for branch in (stmt.body, stmt.orelse):
+                snapshot = dict(self.consumed)
+                for s in branch:
+                    self._stmt(s)
+                if branch and isinstance(
+                        branch[-1], (ast.Return, ast.Raise, ast.Break,
+                                     ast.Continue)):
+                    self.consumed = snapshot
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._expr(item.context_expr)
+                if item.optional_vars is not None:
+                    for name in _target_names(item.optional_vars):
+                        self._assign(name)
+            for s in stmt.body:
+                self._stmt(s)
+        elif isinstance(stmt, ast.Try):
+            for s in stmt.body + stmt.orelse + stmt.finalbody:
+                self._stmt(s)
+            for h in stmt.handlers:
+                for s in h.body:
+                    self._stmt(s)
+        elif isinstance(stmt, (ast.Expr, ast.Return)):
+            if stmt.value is not None:
+                self._expr(stmt.value)
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._expr(child)
+
+    def _assign(self, name: str) -> None:
+        self.consumed.pop(name, None)
+        self.split_arrays.pop(name, None)
+        self.whole_uses.pop(name, None)
+        self.const_subs.pop(name, None)
+
+    def _record_split_assign(self, targets, rhs) -> None:
+        if not isinstance(rhs, ast.Call):
+            return
+        if jax_random_fn(rhs, self.aliases) not in SPLITTERS:
+            return
+        # single-Name target => the result stays an array of keys
+        if len(targets) == 1 and isinstance(targets[0], ast.Name):
+            self.split_arrays[targets[0].id] = rhs.lineno
+
+    # -- expression walk --------------------------------------------------
+
+    def _expr(self, node: ast.expr) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                self._call(sub)
+            elif isinstance(sub, ast.Subscript):
+                base = dotted_name(sub.value)
+                if base and base in self.split_arrays:
+                    if self._const_index(sub.slice) is not None:
+                        self.const_subs.setdefault(base, []).append(sub.lineno)
+                    # slices (keys[:-1]) are disjoint use: neither whole
+                    # nor aliasing, so they don't count either way
+            elif isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+                if sub.id in self.split_arrays and not self._is_subscript_base(
+                        node, sub):
+                    self.whole_uses.setdefault(sub.id, sub.lineno)
+
+    @staticmethod
+    def _const_index(sl: ast.AST) -> Optional[int]:
+        if isinstance(sl, ast.Constant) and isinstance(sl.value, int):
+            return sl.value
+        if isinstance(sl, ast.UnaryOp) and isinstance(sl.op, ast.USub) \
+                and isinstance(sl.operand, ast.Constant) \
+                and isinstance(sl.operand.value, int):
+            return -sl.operand.value
+        return None
+
+    @staticmethod
+    def _is_subscript_base(root: ast.expr, name: ast.Name) -> bool:
+        for sub in ast.walk(root):
+            if isinstance(sub, ast.Subscript) and sub.value is name:
+                return True
+        return False
+
+    def _call(self, call: ast.Call) -> None:
+        fn = jax_random_fn(call, self.aliases)
+        if fn is None or fn in ("PRNGKey", "key") or not call.args:
+            return
+        key = _key_expr_name(call.args[0])
+        if key is None:
+            return
+        prior = self.consumed.get(key)
+        if prior is not None:
+            kind, at = prior
+            rule = "RNG001" if kind == "split" else "RNG002"
+            what = "split" if kind == "split" else "a sampler"
+            self.findings.append(Finding(
+                rule=rule, path=self.mod.path, line=call.lineno,
+                message=(f"PRNG key `{key}` reused by jax.random.{fn} after "
+                         f"being consumed by {what} at line {at}"),
+                hint="derive fresh keys: `k1, k2 = jax.random.split(key)` or "
+                     "`jax.random.fold_in(parent, tag)` with distinct tags"))
+            self.consumed.pop(key, None)  # one finding per consumption
+            return
+        if fn in SPLITTERS:
+            self.consumed[key] = ("split", call.lineno)
+        elif fn in SAMPLERS:
+            self.consumed[key] = ("sampler", call.lineno)
+
+    def _finish_aliasing(self) -> None:
+        for name, sub_lines in self.const_subs.items():
+            whole = self.whole_uses.get(name)
+            if whole is None:
+                continue
+            for line in sub_lines:
+                self.findings.append(Finding(
+                    rule="RNG003", path=self.mod.path, line=line,
+                    message=(f"key array `{name}` from jax.random.split is "
+                             f"used whole (line {whole}) and aliased via a "
+                             "constant subscript — a consumer of the whole "
+                             "array shares this key (the PR 1 `keys[-1]` "
+                             "server-key bug)"),
+                    hint="split one extra key and use disjoint slices: "
+                         "`keys[:-1]` for the cohort, `keys[-1]` for the "
+                         "server — never the whole array plus an element"))
+
+    # -- RNG004: loop-invariant draw --------------------------------------
+
+    def _loop(self, loop: ast.stmt, body: List[ast.stmt]) -> None:
+        assigned: Set[str] = set()
+        if isinstance(loop, (ast.For, ast.AsyncFor)):
+            assigned.update(_target_names(loop.target))
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, (ast.Assign,)):
+                    for t in sub.targets:
+                        assigned.update(_target_names(t))
+                elif isinstance(sub, (ast.AugAssign, ast.AnnAssign,
+                                      ast.For, ast.AsyncFor)):
+                    assigned.update(_target_names(sub.target))
+                elif isinstance(sub, ast.withitem) and sub.optional_vars:
+                    assigned.update(_target_names(sub.optional_vars))
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Lambda)):
+                    break
+                if not isinstance(sub, ast.Call):
+                    continue
+                if self._innermost_loop_of(sub, body) is not loop \
+                        and not self._is_direct(sub, stmt, loop):
+                    continue
+                fn = jax_random_fn(sub, self.aliases)
+                if fn is None or fn in ("PRNGKey", "key"):
+                    continue
+                refs = self._referenced(sub)
+                if refs and not (refs & assigned):
+                    self.findings.append(Finding(
+                        rule="RNG004", path=self.mod.path, line=sub.lineno,
+                        message=(f"jax.random.{fn} inside a loop with "
+                                 "loop-invariant arguments — every iteration "
+                                 "derives the identical PRNG stream"),
+                        hint="mix the loop variable in: "
+                             "`jax.random.fold_in(key, i)`"))
+
+    def _innermost_loop_of(self, call: ast.Call,
+                           body: List[ast.stmt]):
+        # nearest For/While strictly containing the call inside this body
+        best = None
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, (ast.For, ast.AsyncFor, ast.While)):
+                    if any(s is call for s in ast.walk(sub)):
+                        best = sub  # deeper matches overwrite; walk order is
+                        # outer-first so the last match is innermost
+        return best
+
+    def _is_direct(self, call: ast.Call, stmt: ast.stmt,
+                   loop: ast.stmt) -> bool:
+        # call sits in the loop body with no intervening inner loop
+        return self._innermost_loop_of(call, [stmt]) is None
+
+    @staticmethod
+    def _referenced(call: ast.Call) -> Set[str]:
+        refs: Set[str] = set()
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            for sub in ast.walk(arg):
+                d = dotted_name(sub)
+                if d:
+                    refs.add(d)
+                    refs.add(d.split(".")[0])
+        return refs
+
+
+def check(mod: Module) -> List[Finding]:
+    aliases = _alias_map(mod.tree)
+    findings: List[Finding] = []
+    scopes: List[List[ast.stmt]] = [mod.tree.body]
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            scopes.append(node.body)
+    for body in scopes:
+        findings.extend(_Scope(mod, aliases).run(body))
+    return findings

@@ -1,0 +1,353 @@
+"""Embedded known-bad / known-good fixtures — ``flcheck --self-test``.
+
+Every rule family ships a minimal fixture that must fire and a clean twin
+that must stay silent, so the checker's own regressions are caught by the
+same CI job that runs it (and ``benchmarks/run.py --only analysis`` times
+this suite alongside the full ``src/`` scan).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Dict, List, NamedTuple, Optional
+
+from repro.analysis.core import run_analysis
+
+
+class Fixture(NamedTuple):
+    name: str
+    rule: Optional[str]       # rule that must fire; None => must be clean
+    files: Dict[str, str]     # relpath -> source
+
+
+FIXTURES: List[Fixture] = [
+    Fixture("rng001_reuse_after_split", "RNG001", {"mod.py": """
+import jax
+
+def f(key):
+    keys = jax.random.split(key, 4)
+    k2 = jax.random.fold_in(key, 1)
+    return keys, k2
+"""}),
+    Fixture("rng_clean_split_tree", None, {"mod.py": """
+import jax
+
+def f(key):
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (4,))
+    y = jax.random.normal(k2, (4,))
+    return x + y
+"""}),
+    Fixture("rng002_double_draw", "RNG002", {"mod.py": """
+import jax
+
+def f(key):
+    x = jax.random.normal(key, (4,))
+    y = jax.random.uniform(key, (4,))
+    return x + y
+"""}),
+    # the PR 1 server-key bug: cohort consumes the whole key array AND the
+    # server aliases keys[-1]
+    Fixture("rng003_keys_minus_one_aliasing", "RNG003", {"mod.py": """
+import jax
+
+def run_round(key, clients, run_cohort, server_round):
+    keys = jax.random.split(key, len(clients))
+    outs = run_cohort(clients, keys)
+    k_server = keys[-1]
+    return outs, server_round(k_server)
+"""}),
+    Fixture("rng003_disjoint_slices_ok", None, {"mod.py": """
+import jax
+
+def run_round(key, clients, run_cohort, server_round):
+    keys = jax.random.split(key, len(clients) + 1)
+    outs = run_cohort(clients, keys[:-1])
+    k_server = keys[-1]
+    return outs, server_round(k_server)
+"""}),
+    Fixture("rng004_loop_invariant_key", "RNG004", {"mod.py": """
+import jax
+
+def f(key, clients):
+    outs = []
+    for c in clients:
+        k = jax.random.fold_in(key, 0)
+        outs.append(k)
+    return outs
+"""}),
+    Fixture("rng004_folds_loop_var_ok", None, {"mod.py": """
+import jax
+
+def f(key, clients):
+    outs = []
+    for i, c in enumerate(clients):
+        k = jax.random.fold_in(key, i)
+        outs.append(k)
+    return outs
+"""}),
+    Fixture("pur001_if_on_tracer", "PUR001", {"mod.py": """
+import jax
+
+@jax.jit
+def f(x):
+    if x > 0:
+        return x
+    return -x
+"""}),
+    Fixture("pur001_static_shape_if_ok", None, {"mod.py": """
+import jax
+
+@jax.jit
+def f(x):
+    n, = x.shape
+    if n > 4:
+        return x[:4]
+    return x
+"""}),
+    Fixture("pur002_host_cast", "PUR002", {"mod.py": """
+import jax
+
+@jax.jit
+def f(x):
+    return float(x)
+"""}),
+    Fixture("pur003_time_in_jit", "PUR003", {"mod.py": """
+import jax
+import time
+
+@jax.jit
+def f(x):
+    t = time.time()
+    return x + t
+"""}),
+    Fixture("pur004_assert_on_tracer", "PUR004", {"mod.py": """
+import jax
+
+@jax.jit
+def f(x):
+    assert x.sum() > 0
+    return x
+"""}),
+    Fixture("pal001_lane_misaligned", "PAL001", {"mod.py": """
+import jax
+from jax.experimental import pallas as pl
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def copy_op(x):
+    return pl.pallas_call(
+        _k,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 100), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 100), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+"""}),
+    Fixture("pal002_sublane_misaligned", "PAL002", {"mod.py": """
+import jax
+from jax.experimental import pallas as pl
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def copy_op(x):
+    return pl.pallas_call(
+        _k,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((4, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+"""}),
+    Fixture("pal_aligned_blocks_ok", None, {"mod.py": """
+import jax
+from jax.experimental import pallas as pl
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def copy_op(x, block_n=256):
+    return pl.pallas_call(
+        _k,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((block_n, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_n, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+"""}),
+    Fixture("pal003_vmem_blowout", "PAL003", {"mod.py": """
+import jax
+from jax.experimental import pallas as pl
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def copy_op(x):
+    return pl.pallas_call(
+        _k,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((4096, 1024), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4096, 1024), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+"""}),
+    Fixture("pal004_missing_ref_oracle", "PAL004", {"kernels/foo.py": """
+import jax
+from jax.experimental import pallas as pl
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def foo_kernel(x):
+    return pl.pallas_call(
+        _k,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+"""}),
+    Fixture("pal004_ref_oracle_present_ok", None, {
+        "kernels/foo.py": """
+import jax
+from jax.experimental import pallas as pl
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def foo_kernel(x):
+    return pl.pallas_call(
+        _k,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+""",
+        "kernels/ref.py": """
+import jax.numpy as jnp
+
+def foo_ref(x):
+    return x
+"""}),
+    Fixture("led001_uncharged_encode", "LED001", {"mod.py": """
+import struct
+
+class Ping:
+    MSG_TYPE = 7
+
+    def encode(self):
+        return struct.pack("<I", 1)
+
+    @classmethod
+    def decode(cls, wire):
+        if len(wire) < 4:
+            raise TruncatedFrame("short")
+        return cls()
+
+def send(ch):
+    wire = Ping().encode()
+    ch.push(wire)
+    return wire
+"""}),
+    Fixture("led001_charged_encode_ok", None, {"mod.py": """
+import struct
+
+class Ping:
+    MSG_TYPE = 7
+
+    def encode(self):
+        return struct.pack("<I", 1)
+
+    @classmethod
+    def decode(cls, wire):
+        if len(wire) < 4:
+            raise TruncatedFrame("short")
+        return cls()
+
+def send(ch):
+    wire = Ping().encode()
+    ch.ledger.upload("weights", len(wire))
+    return wire
+"""}),
+    Fixture("led002_unknown_category", "LED002", {"mod.py": """
+def charge(ledger, wire):
+    ledger.upload("knowledge", len(wire))
+"""}),
+    Fixture("led003_format_drift", "LED003", {"mod.py": """
+import struct
+
+class Pong:
+    MSG_TYPE = 8
+
+    def encode(self):
+        return struct.pack("<IH", 1, 2)
+
+    @classmethod
+    def decode(cls, wire):
+        a, = struct.unpack_from("<I", wire, 0)
+        if a != 1:
+            raise FrameError("bad")
+        return cls()
+"""}),
+    Fixture("led004_no_frame_error_path", "LED004", {"mod.py": """
+import struct
+
+class Pong:
+    MSG_TYPE = 9
+
+    def encode(self):
+        return struct.pack("<I", 1)
+
+    @classmethod
+    def decode(cls, wire):
+        a, = struct.unpack("<I", wire)
+        return cls()
+"""}),
+    # "@flcheck@" is rewritten to "flcheck" at materialization time so the
+    # embedded directives don't fire when flcheck scans its own source
+    Fixture("sup001_reasonless_suppression", "SUP001", {"mod.py": """
+import jax
+
+def f(key):
+    x = jax.random.normal(key, (4,))
+    y = jax.random.uniform(key, (4,))  # @flcheck@: disable=RNG002
+    return x + y
+"""}),
+    Fixture("suppression_with_reason_ok", None, {"mod.py": """
+import jax
+
+def f(key):
+    x = jax.random.normal(key, (4,))
+    y = jax.random.uniform(key, (4,))  # @flcheck@: disable=RNG002 (A/B same-stream comparison)
+    return x + y
+"""}),
+]
+
+
+def run_self_test(verbose: bool = False) -> List[str]:
+    """Run every fixture; returns a list of failure messages (empty = ok)."""
+    failures: List[str] = []
+    for fx in FIXTURES:
+        with tempfile.TemporaryDirectory(prefix="flcheck_selftest_") as tmp:
+            for rel, src in fx.files.items():
+                path = os.path.join(tmp, rel)
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+                with open(path, "w", encoding="utf-8") as f:
+                    f.write(src.replace("@flcheck@", "flcheck"))
+            findings = run_analysis([tmp], root=tmp)
+        fired = {f.rule for f in findings}
+        if fx.rule is None:
+            if fired:
+                failures.append(
+                    f"{fx.name}: expected clean, got {sorted(fired)}")
+        elif fx.rule not in fired:
+            failures.append(
+                f"{fx.name}: expected {fx.rule}, got {sorted(fired) or 'nothing'}")
+        if verbose:
+            status = "FAIL" if failures and failures[-1].startswith(fx.name) \
+                else "ok"
+            print(f"  {status:4s} {fx.name} -> {sorted(fired) or '[]'}")
+    return failures

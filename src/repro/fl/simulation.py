@@ -133,6 +133,7 @@ class FLSimulation:
             # key is derived separately — it used to alias the last
             # client's key
             keys = jax.random.split(k_round, len(idx))
+            # flcheck: disable=RNG001 (deliberate: the server key must be derived from k_round without changing the historical split count; fold_in(k_round, len(idx)) is disjoint from every split stream)
             k_server = jax.random.fold_in(k_round, len(idx))
             cohort = [self.clients[int(i)] for i in idx]
             # the formed cohort downloads W_G(t-1) NOW (round 0 included)

@@ -1,0 +1,365 @@
+"""flcheck (repro.analysis) — rule fixtures, baseline workflow, repo gate.
+
+The three acceptance fixtures re-introduce historical bugs and assert the
+exact rule ID fires: the PR 1 ``keys[-1]`` server-key aliasing (RNG003),
+an uncharged frame send (LED001), and a misaligned Pallas BlockSpec
+(PAL001).  The repo gate runs the real scan against the checked-in
+``analysis_baseline.json`` exactly like CI does.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import run_analysis, core
+from repro.analysis.selftest import run_self_test
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def scan(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    return run_analysis([str(tmp_path)], root=str(tmp_path))
+
+
+def rules(findings):
+    return {f.rule for f in findings}
+
+
+# --------------------------------------------------------------- acceptance
+
+def test_pr1_keys_minus_one_bug_is_flagged(tmp_path):
+    # the exact shape of the PR 1 bug: the cohort consumes the whole split
+    # array while the server aliases its last element
+    findings = scan(tmp_path, {"sim.py": """
+import jax
+
+def run_round(key, clients, run_cohort, server_round):
+    keys = jax.random.split(key, len(clients))
+    outs = run_cohort(clients, keys)
+    k_server = keys[-1]
+    return outs, server_round(k_server)
+"""})
+    assert "RNG003" in rules(findings)
+    (f,) = [f for f in findings if f.rule == "RNG003"]
+    assert f.line == 7 and "keys[-1]" in f.message
+
+
+def test_fixed_disjoint_slice_pattern_is_clean(tmp_path):
+    # the post-fix pattern from repro.core.rounds: disjoint slices
+    findings = scan(tmp_path, {"sim.py": """
+import jax
+
+def run_round(key, clients, run_cohort, server_round):
+    keys = jax.random.split(key, len(clients) + 1)
+    outs = run_cohort(clients, keys[:-1])
+    return outs, server_round(keys[-1])
+"""})
+    assert not rules(findings)
+
+
+def test_uncharged_channel_send_is_flagged(tmp_path):
+    findings = scan(tmp_path, {"chan.py": """
+import struct
+
+class UpperUpdate:
+    MSG_TYPE = 2
+
+    def encode(self):
+        return struct.pack("<I", 0)
+
+    @classmethod
+    def decode(cls, wire):
+        if len(wire) < 4:
+            raise TruncatedFrame("short")
+        return cls()
+
+class Channel:
+    def send(self, update):
+        wire = UpperUpdate().encode()
+        self.deliver(wire)
+        return wire
+"""})
+    assert "LED001" in rules(findings)
+
+
+def test_charged_channel_send_is_clean(tmp_path):
+    findings = scan(tmp_path, {"chan.py": """
+import struct
+
+class UpperUpdate:
+    MSG_TYPE = 2
+
+    def encode(self):
+        return struct.pack("<I", 0)
+
+    @classmethod
+    def decode(cls, wire):
+        if len(wire) < 4:
+            raise TruncatedFrame("short")
+        return cls()
+
+class Channel:
+    def send(self, update):
+        wire = UpperUpdate().encode()
+        self._deliver(wire)
+        return wire
+
+    def _deliver(self, wire):
+        self.ledger.upload("weights", len(wire))
+"""})
+    assert "LED001" not in rules(findings)
+
+
+def test_misaligned_blockspec_is_flagged(tmp_path):
+    findings = scan(tmp_path, {"k.py": """
+import jax
+from jax.experimental import pallas as pl
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def op(x):
+    return pl.pallas_call(
+        _k,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 200), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 200), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+"""})
+    assert "PAL001" in rules(findings)
+
+
+# ------------------------------------------------------------ rule families
+
+def test_self_test_fixtures_all_pass():
+    assert run_self_test() == []
+
+
+def test_rng001_reuse_after_split(tmp_path):
+    findings = scan(tmp_path, {"m.py": """
+import jax
+
+def f(key):
+    keys = jax.random.split(key, 4)
+    y = jax.random.normal(key, (2,))
+    return keys, y
+"""})
+    assert rules(findings) == {"RNG001"}
+
+
+def test_rng_exclusive_early_return_branches_are_clean(tmp_path):
+    # the repro.fl.server.sample_clients shape: two draws on exclusive paths
+    findings = scan(tmp_path, {"m.py": """
+import jax
+
+def sample(key, n, elig):
+    if len(elig) == n:
+        return jax.random.choice(key, n, (4,))
+    return jax.random.choice(key, len(elig), (4,))
+"""})
+    assert not rules(findings)
+
+
+def test_rng004_loop_invariant_selection_key(tmp_path):
+    # the examples/federated_lm.py bug: one selection key shared by every
+    # client in the round loop
+    findings = scan(tmp_path, {"m.py": """
+import jax
+
+def round_loop(key, clients, select):
+    out = []
+    for rnd in range(3):
+        for c in clients:
+            out.append(select(c, jax.random.fold_in(key, rnd)))
+    return out
+"""})
+    assert "RNG004" in rules(findings)
+
+
+def test_federated_lm_example_derives_per_client_keys():
+    # regression for the fix: the example must scan clean (pre-fix it
+    # shared jax.random.fold_in(key, rnd) across all clients -> RNG004)
+    findings = run_analysis(
+        [os.path.join(REPO, "examples", "federated_lm.py")], root=REPO)
+    assert not {f.rule for f in findings if f.rule.startswith("RNG")}
+
+
+def test_pur001_traced_branch_and_is_none_precision(tmp_path):
+    findings = scan(tmp_path, {"m.py": """
+import jax
+
+@jax.jit
+def f(x, labels):
+    if labels is None:
+        return x
+    if x.sum() > 0:
+        return x + 1
+    return x
+"""})
+    led = [f for f in findings if f.rule == "PUR001"]
+    assert len(led) == 1 and led[0].line == 8
+
+
+def test_pur_static_argnames_params_are_static(tmp_path):
+    findings = scan(tmp_path, {"m.py": """
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def f(x, block_n):
+    if block_n > 8:
+        return x[:block_n]
+    return x
+"""})
+    assert not rules(findings)
+
+
+def test_pal002_and_vmem_budget(tmp_path):
+    findings = scan(tmp_path, {"m.py": """
+import jax
+from jax.experimental import pallas as pl
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+def op(x):
+    return pl.pallas_call(
+        _k,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((12, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8192, 1024), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+"""})
+    assert {"PAL002", "PAL003"} <= rules(findings)
+
+
+def test_led002_unknown_category(tmp_path):
+    findings = scan(tmp_path, {"m.py": """
+def charge(ledger, wire):
+    ledger.upload("knowledge", len(wire))
+"""})
+    assert rules(findings) == {"LED002"}
+
+
+def test_led003_encode_decode_drift(tmp_path):
+    findings = scan(tmp_path, {"m.py": """
+import struct
+
+class M:
+    MSG_TYPE = 5
+
+    def encode(self):
+        return struct.pack("<IIB", 1, 2, 3)
+
+    @classmethod
+    def decode(cls, wire):
+        a, b = struct.unpack_from("<II", wire, 0)
+        if a != 1:
+            raise FrameError("bad")
+        return cls()
+"""})
+    assert rules(findings) == {"LED003"}
+
+
+# ------------------------------------------------- suppressions + baseline
+
+def test_reasonless_suppression_is_sup001_and_not_honored(tmp_path):
+    directive = "# " + "flcheck: disable=RNG002"
+    findings = scan(tmp_path, {"m.py": f"""
+import jax
+
+def f(key):
+    x = jax.random.normal(key, (4,))
+    y = jax.random.uniform(key, (4,))  {directive}
+    return x + y
+"""})
+    assert rules(findings) == {"RNG002", "SUP001"}
+
+
+def test_suppression_with_reason_is_honored(tmp_path):
+    directive = "# " + "flcheck: disable=RNG002 (A/B same-stream check)"
+    findings = scan(tmp_path, {"m.py": f"""
+import jax
+
+def f(key):
+    x = jax.random.normal(key, (4,))
+    y = jax.random.uniform(key, (4,))  {directive}
+    return x + y
+"""})
+    assert not rules(findings)
+
+
+def test_baseline_grandfathers_old_and_flags_new(tmp_path):
+    bad = """
+import jax
+
+def f(key):
+    x = jax.random.normal(key, (4,))
+    y = jax.random.uniform(key, (4,))
+    return x + y
+"""
+    (tmp_path / "old.py").write_text(bad)
+    first = run_analysis([str(tmp_path)], root=str(tmp_path))
+    base = tmp_path / "analysis_baseline.json"
+    core.write_baseline(str(base), first, str(tmp_path))
+
+    (tmp_path / "new.py").write_text(bad.replace("(4,)", "(8,)"))
+    second = run_analysis([str(tmp_path)], root=str(tmp_path))
+    fresh = core.new_findings(second, core.load_baseline(str(base)),
+                              str(tmp_path))
+    assert {f.path for f in fresh} == {"new.py"}
+
+
+def test_baseline_fingerprints_survive_line_shifts(tmp_path):
+    bad = """import jax
+
+def f(key):
+    x = jax.random.normal(key, (4,))
+    y = jax.random.uniform(key, (4,))
+    return x + y
+"""
+    (tmp_path / "m.py").write_text(bad)
+    first = run_analysis([str(tmp_path)], root=str(tmp_path))
+    base = tmp_path / "b.json"
+    core.write_baseline(str(base), first, str(tmp_path))
+
+    (tmp_path / "m.py").write_text("# a new leading comment\n\n" + bad)
+    shifted = run_analysis([str(tmp_path)], root=str(tmp_path))
+    assert shifted and shifted[0].line != first[0].line
+    assert core.new_findings(shifted, core.load_baseline(str(base)),
+                             str(tmp_path)) == []
+
+
+# ------------------------------------------------------------- repo gate
+
+def test_repo_scan_is_clean_against_checked_in_baseline():
+    findings = run_analysis(["src", "benchmarks"], root=REPO)
+    baseline = core.load_baseline(os.path.join(REPO,
+                                               "analysis_baseline.json"))
+    fresh = core.new_findings(
+        [f for f in findings if f.rule != "SUP001"], baseline, REPO)
+    assert fresh == [], "\n".join(f.render() for f in fresh)
+    assert not [f for f in findings if f.rule == "SUP001"]
+
+
+def test_cli_exit_codes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src", "benchmarks",
+         "--against-baseline", "analysis_baseline.json"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--self-test"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
