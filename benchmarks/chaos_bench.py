@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import numpy as np
 
@@ -36,6 +35,7 @@ from repro.data import SyntheticImageDataset, partition_k_shards
 from repro.fl.faults import FaultPlan
 from repro.fl.simulation import FLSimulation
 from repro.models.wrn import make_split_wrn
+from repro.obs.timing import monotonic
 
 ROUNDS = 5
 NUM_CLIENTS, SAMPLES_PER_CLIENT = 4, 300
@@ -91,7 +91,7 @@ def run():
 
     base_acc = None
     for drop, corrupt in SWEEP:
-        t0 = time.time()
+        t0 = monotonic()
         plan = _plan(drop, corrupt)
         sim = FLSimulation(model, clients, test, _flcfg(), seed=0,
                            fault_plan=plan if plan.any_faults else None,
@@ -121,7 +121,7 @@ def run():
             "quarantined_per_round": res.quarantined,
             "injected_corruptions_total": injected,
             "silent_corruptions_total": silent,
-            "wall_s": time.time() - t0,
+            "wall_s": monotonic() - t0,
         }
         rows.append((f"{key}_final_acc", acc, None))
         rows.append((f"{key}_retransmit_up_bytes", float(retx), None))

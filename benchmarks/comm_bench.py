@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import numpy as np
 
@@ -32,6 +31,7 @@ from repro.configs import FLConfig, get_wrn_config
 from repro.data import SyntheticImageDataset, partition_k_shards
 from repro.fl.simulation import FLSimulation
 from repro.models.wrn import make_split_wrn
+from repro.obs.timing import monotonic
 
 CODECS = ("raw_f32", "f16", "int8")
 ROUNDS = 5
@@ -82,7 +82,7 @@ def run():
                         "paper_fraction": PAPER_FRACTION, "codecs": {}}
 
     for codec in CODECS:
-        t0 = time.time()
+        t0 = monotonic()
         sim = FLSimulation(model, clients, test, _flcfg(
             transport_codec=codec), seed=0)
         res = sim.run(rounds=ROUNDS, eval_every=ROUNDS)
@@ -98,7 +98,7 @@ def run():
             "knowledge_fraction_of_raw": frac,
             "final_acc": acc,
             "selected_fraction": float(res.selected_fraction),
-            "wall_s": time.time() - t0,
+            "wall_s": monotonic() - t0,
         }
         rows.append((f"{codec}_knowledge_up_bytes_per_round", know, None))
         rows.append((f"{codec}_knowledge_fraction_of_raw", frac,

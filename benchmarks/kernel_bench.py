@@ -4,23 +4,13 @@ meaningless, so we bench the reference paths the kernels mirror and report
 the analytic FLOPs/bytes each kernel would move on a v5e)."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
-
-
-def _time(fn, *args, iters=5):
-    jax.block_until_ready(fn(*args))       # warmup + compile exactly once
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
+from repro.obs.timing import timeit
 
 
 def bench_kmeans():
@@ -31,7 +21,7 @@ def bench_kmeans():
         c = jnp.asarray(np.random.default_rng(1).normal(size=(k, d)),
                         jnp.float32)
         f = jax.jit(ref.kmeans_pairwise_dist_ref)
-        dt = _time(f, x, c)
+        dt = timeit(f, x, c).seconds
         flops = 2.0 * n * d * k
         tpu_est = max(flops / PEAK_FLOPS_BF16,
                       (n * d + k * d + n * k) * 4 / HBM_BW)
@@ -51,7 +41,7 @@ def bench_attention():
                         jnp.bfloat16)
         f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v,
                                                             causal=True))
-        dt = _time(f, q, k, v, iters=3)
+        dt = timeit(f, q, k, v, iters=3).seconds
         flops = 4.0 * b * h * s * s * d
         rows.append((f"attn b={b} s={s} h={h} d={d}", dt * 1e6,
                      f"tpu_roofline_us={flops/PEAK_FLOPS_BF16*1e6:.2f}"))
@@ -69,7 +59,7 @@ def bench_decode():
                          jnp.bfloat16)
         valid = jnp.ones((b, s), bool)
         f = jax.jit(ref.flash_decode_ref)
-        dt = _time(f, q, kc, vc, valid, iters=3)
+        dt = timeit(f, q, kc, vc, valid, iters=3).seconds
         nbytes = 2.0 * b * s * kv * d * 2
         rows.append((f"decode b={b} S={s}", dt * 1e6,
                      f"tpu_hbm_bound_us={nbytes/HBM_BW*1e6:.2f}"))
@@ -89,11 +79,7 @@ def bench_selection_pipeline():
         return select_metadata(acts, labels, key, num_classes=10,
                                clusters_per_class=10, pca_components=64,
                                kmeans_iters=25)
-    run()
-    t0 = time.perf_counter()
-    s = run()
-    jax.block_until_ready(s.indices)
-    dt = time.perf_counter() - t0
+    dt, s = timeit(run, iters=1)
     rows.append(("selection_pipeline_2500maps", dt * 1e6,
                  f"selected={int(np.asarray(s.valid).sum())}"))
     return rows

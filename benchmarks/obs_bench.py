@@ -1,0 +1,158 @@
+"""Observability benchmark -> BENCH_obs.json (``run.py --only obs``).
+
+The tracer's contract has three measurable halves, and this bench measures
+all of them on the same multi-round simulation:
+
+  * overhead — wall time of a fully-traced run vs the identical disabled
+    run (claim: <= 3%; spans are plain-Python appends and the NullTracer
+    costs one attribute read, so tracing must never tax the runtime)
+  * completeness — every byte the CommLedger charged is attributable to
+    some span (``Tracer.attributed_bytes()`` equals the ledger's totals
+    and the ``unattributed`` bucket is empty). ASSERTED, not just
+    reported: a wire charge outside any span is an instrumentation bug.
+  * fidelity — the traced run's final weights and ledger summary are
+    bit-identical to the untraced run's (observing the run must not
+    change it), plus trace throughput (records/sec) for sizing.
+
+Timing uses the repo clock (``repro.obs.timing``): one warmup run pays
+compile, then best-of-``REPS`` per arm — the same discipline as the other
+benches, which matters here because the claim is a small ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.configs import FLConfig, get_wrn_config
+from repro.data import SyntheticImageDataset, partition_k_shards
+from repro.fl.simulation import FLSimulation
+from repro.models.wrn import make_split_wrn
+from repro.obs.timing import monotonic
+
+ROUNDS = 3
+NUM_CLIENTS, SAMPLES_PER_CLIENT = 3, 150
+REPS = 2                      # best-of per arm, after one warmup run
+OVERHEAD_CLAIM = 0.03
+
+
+def _flcfg(**kw):
+    base = dict(num_clients=NUM_CLIENTS, clients_per_round=NUM_CLIENTS,
+                local_epochs=1, local_batch_size=50, local_lr=0.1,
+                pca_components=16, clusters_per_class=3, kmeans_iters=6,
+                meta_epochs=10, meta_batch_size=8, meta_lr=0.05)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _setting():
+    cfg = get_wrn_config().reduced()
+    model = make_split_wrn(cfg)
+    train = SyntheticImageDataset(NUM_CLIENTS * SAMPLES_PER_CLIENT,
+                                  image_size=cfg.image_size, num_classes=10,
+                                  modes_per_class=3, noise=0.25, seed=0)
+    test = SyntheticImageDataset(300, image_size=cfg.image_size,
+                                 num_classes=10, modes_per_class=3,
+                                 noise=0.25, seed=1)
+    clients = partition_k_shards(train, NUM_CLIENTS, k_classes=3,
+                                 samples_per_client=SAMPLES_PER_CLIENT,
+                                 seed=0)
+    return model, clients, test
+
+
+def _run_once(model, clients, test, observability):
+    sim = FLSimulation(model, clients, test,
+                       _flcfg(observability=observability), seed=0)
+    t0 = monotonic()
+    res = sim.run(rounds=ROUNDS, eval_every=ROUNDS)
+    return sim, res, monotonic() - t0
+
+
+def _weights_equal(a, b):
+    import jax
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        bool((np.asarray(x) == np.asarray(y)).all()) for x, y in zip(la, lb))
+
+
+def run():
+    model, clients, test = _setting()
+    # one warmup run pays compile for both arms (identical jaxprs: the
+    # tracer adds no jax operations — that IS the bit-identity claim)
+    _run_once(model, clients, test, False)
+
+    t_off, t_on = float("inf"), float("inf")
+    sim_off = sim_on = res_off = res_on = None
+    for _ in range(REPS):
+        sim_off, res_off, dt = _run_once(model, clients, test, False)
+        t_off = min(t_off, dt)
+        sim_on, res_on, dt = _run_once(model, clients, test, True)
+        t_on = min(t_on, dt)
+
+    overhead = (t_on - t_off) / t_off
+
+    # fidelity: observing the run must not change it
+    bit_identical = _weights_equal(sim_off.server.global_params,
+                                   sim_on.server.global_params)
+    ledger_equal = res_off.comm == res_on.comm
+    assert bit_identical, "traced run diverged from untraced weights"
+    assert ledger_equal, "traced run diverged from untraced ledger"
+
+    # completeness: every ledger byte reachable from some span
+    tr = sim_on.tracer
+    att = tr.attributed_bytes()
+    att_up = sum(v for k, v in att.items() if k.startswith("up/"))
+    att_down = sum(v for k, v in att.items() if k.startswith("down/"))
+    led_up = sum(sim_on.server.ledger.up.values())
+    led_down = sum(sim_on.server.ledger.down.values())
+    assert att_up == led_up and att_down == led_down, (
+        f"span-attributed bytes {att_up}/{att_down} != ledger "
+        f"{led_up}/{led_down}")
+    assert not tr.unattributed, (
+        f"bytes charged outside any span: {dict(tr.unattributed)}")
+
+    n_spans, n_events = len(tr.spans), len(tr.events)
+    records_per_sec = (n_spans + n_events) / max(t_on, 1e-9)
+    sketches = sum(1 for e in tr.events if e["name"] == "selection_sketch")
+
+    report = {
+        "rounds": ROUNDS, "clients": NUM_CLIENTS, "reps": REPS,
+        "untraced_s": t_off, "traced_s": t_on,
+        "overhead_frac": overhead,
+        "spans": n_spans, "events": n_events,
+        "selection_sketches": sketches,
+        "records_per_sec": records_per_sec,
+        "attributed_up_bytes": att_up, "attributed_down_bytes": att_down,
+        "phase_wall_s": res_on.phase_wall_s,
+        "round_wall_s": res_on.round_wall_s,
+        "claims": {
+            "overhead_leq_3pct": overhead <= OVERHEAD_CLAIM,
+            "every_ledger_byte_span_attributed": True,   # asserted above
+            "traced_run_bit_identical": bool(bit_identical and ledger_equal),
+        },
+    }
+    rows = [
+        ("obs_untraced_s", t_off, None),
+        ("obs_traced_s", t_on, None),
+        ("obs_overhead_frac", overhead, f"<= {OVERHEAD_CLAIM} claimed"),
+        ("obs_trace_records", float(n_spans + n_events),
+         f"{n_spans} spans + {n_events} events"),
+        ("obs_records_per_sec", records_per_sec, None),
+        ("obs_selection_sketches", float(sketches),
+         f"{NUM_CLIENTS} clients x {ROUNDS} rounds"),
+    ]
+    for claim, ok in report["claims"].items():
+        rows.append((f"claim_{claim}", "PASS" if ok else "FAIL", None))
+
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_obs.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    return rows, report
+
+
+if __name__ == "__main__":
+    for name, val, extra in run()[0]:
+        v = f"{val:.4f}" if isinstance(val, float) else val
+        print(f"{name},{v},{extra if extra is not None else ''}")

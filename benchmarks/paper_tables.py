@@ -16,7 +16,6 @@ Each function returns (rows, claims) where claims is a dict of
 """
 from __future__ import annotations
 
-import time
 from dataclasses import replace
 
 import jax

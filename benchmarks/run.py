@@ -3,12 +3,13 @@ communication benchmark + kernel micro-benchmarks + the selection-pipeline
 suite. Prints ``name,value,extra`` CSV rows and a paper-claim validation
 summary; writes experiments/bench_results.json, BENCH_selection.json (the
 §3.1 hot-path trajectory), BENCH_comms.json (bytes-per-round + accuracy
-per transport codec) and BENCH_faults.json (the chaos sweep: graceful
-degradation + recovery overhead under injected faults), all tracked PR
-over PR.
+per transport codec), BENCH_faults.json (the chaos sweep: graceful
+degradation + recovery overhead under injected faults) and BENCH_obs.json
+(tracing overhead + byte-attribution completeness), all tracked PR over
+PR.
 
   PYTHONPATH=src python -m benchmarks.run \\
-      [--only tables|kernels|comms|selection|faults|analysis]
+      [--only tables|kernels|comms|selection|faults|analysis|obs]
 """
 from __future__ import annotations
 
@@ -16,7 +17,8 @@ import argparse
 import json
 import os
 import sys
-import time
+
+from repro.obs.timing import monotonic
 
 
 def _emit(rows):
@@ -28,7 +30,7 @@ def _emit(rows):
 def run_tables(results):
     import jax
     from benchmarks import paper_tables as T
-    t0 = time.time()
+    t0 = monotonic()
     all_claims = {}
 
     def section(title, key, fn):
@@ -59,7 +61,7 @@ def run_tables(results):
         results["fig2_curves"] = {str(k): v for k, v in out[2].items()}
     section("Table 7 — L2 in FL meta-training", "table_7", T.table_7_l2_in_fl)
 
-    print(f"\n# paper-claim validation ({time.time()-t0:.0f}s)")
+    print(f"\n# paper-claim validation ({monotonic()-t0:.0f}s)")
     ok = 0
     for claim, passed in all_claims.items():
         print(f"claim,{'PASS' if passed else 'FAIL'},{claim}")
@@ -98,6 +100,20 @@ def run_faults(results):
     return report
 
 
+def run_obs(results):
+    """Observability benchmark: tracing overhead (traced vs disabled),
+    byte-attribution completeness (asserted) and trace throughput
+    -> BENCH_obs.json."""
+    from benchmarks import obs_bench as O
+    print("# observability (tracer overhead + completeness) "
+          f"-> BENCH_obs.json ({O.NUM_CLIENTS} clients x "
+          f"{O.SAMPLES_PER_CLIENT} samples, {O.ROUNDS} rounds/arm)")
+    rows, report = O.run()
+    _emit(rows)
+    results["obs"] = report
+    return report
+
+
 def run_selection(results):
     """§3.1 selection pipeline at paper scale -> BENCH_selection.json."""
     from benchmarks import selection_bench as S
@@ -114,12 +130,12 @@ def run_analysis_bench(results):
     from repro.analysis import run_analysis
     from repro.analysis.selftest import FIXTURES, run_self_test
     print("# static analysis (flcheck self-test + full src/ scan)")
-    t0 = time.time()
+    t0 = monotonic()
     failures = run_self_test()
-    t_self = time.time() - t0
-    t0 = time.time()
+    t_self = monotonic() - t0
+    t0 = monotonic()
     findings = run_analysis(["src", "benchmarks"])
-    t_scan = time.time() - t0
+    t_scan = monotonic() - t0
     rows = [
         ("analysis_selftest_s", t_self,
          f"{len(FIXTURES) - len(failures)}/{len(FIXTURES)} fixtures ok"),
@@ -152,17 +168,19 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "tables", "kernels", "comm", "comms",
-                             "selection", "faults", "analysis"])
+                             "selection", "faults", "analysis", "obs"])
     args = ap.parse_args(argv)
 
     results = {}
-    t0 = time.time()
+    t0 = monotonic()
     if args.only in (None, "selection"):
         run_selection(results)
     if args.only in (None, "comm", "comms"):
         run_comm(results)
     if args.only in (None, "faults"):
         run_faults(results)
+    if args.only in (None, "obs"):
+        run_obs(results)
     if args.only in (None, "kernels"):
         run_kernels(results)
     if args.only in (None, "analysis"):
@@ -174,7 +192,7 @@ def main(argv=None) -> None:
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/bench_results.json", "w") as f:
         json.dump(results, f, indent=1, default=str)
-    print(f"\ntotal,{time.time()-t0:.1f}s,results->experiments/bench_results.json")
+    print(f"\ntotal,{monotonic()-t0:.1f}s,results->experiments/bench_results.json")
     if claims and not all(claims.values()):
         failed = [c for c, p in claims.items() if not p]
         print(f"WARNING: {len(failed)} claim(s) not validated: {failed}")

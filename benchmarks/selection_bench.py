@@ -40,7 +40,6 @@ import json
 import os
 import subprocess
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +49,7 @@ from repro.core.selection import (select_metadata, select_metadata_batched,
                                   select_metadata_reference)
 from repro.data import SyntheticActivationMaps
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.obs.timing import timeit
 
 # the selection engine computes in f32; the MXU's f32 throughput is half
 # the bf16 peak the mesh constants quote
@@ -72,15 +72,8 @@ def structured_activations(seed: int):
 
 
 def _time(fn, iters=7):
-    out = fn()
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best, out
+    """Best-of-``iters`` via the repo's sanctioned timer (warmup included)."""
+    return timeit(fn, iters=iters, reduce="min")
 
 
 def _roofline():

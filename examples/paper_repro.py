@@ -13,7 +13,6 @@ driver: every round is a full federated train step over all clients.
 import argparse
 import json
 import os
-import time
 
 import jax
 import numpy as np
@@ -23,6 +22,7 @@ from repro.configs import FLConfig, get_wrn_config
 from repro.data import SyntheticImageDataset, partition_k_shards
 from repro.fl.simulation import FLSimulation
 from repro.models.wrn import make_split_wrn
+from repro.obs.timing import monotonic
 
 
 def main():
@@ -61,7 +61,7 @@ def main():
                      use_selection=not args.no_selection)
 
     sim = FLSimulation(model, clients, test, flcfg, seed=0)
-    t0 = time.time()
+    t0 = monotonic()
     res = sim.run(rounds=args.rounds, eval_every=max(args.rounds // 10, 1),
                   verbose=True)
     if args.ckpt_dir:
@@ -75,7 +75,7 @@ def main():
         "metadata_counts": res.metadata_counts,
         "selected_fraction": res.selected_fraction,
         "comm": {k: v for k, v in res.comm.items()},
-        "wall_time_s": time.time() - t0,
+        "wall_time_s": monotonic() - t0,
     }
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -1,8 +1,14 @@
 """Quickstart: the paper's split-FL with clustered data selection, end to end
 on CPU in ~2 minutes.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [--trace TRACE.jsonl]
+
+``--trace`` turns on observability (FLConfig.observability) and writes the
+run's span/metrics trace as JSONL — inspect it with
+``python -m repro.obs summarize TRACE.jsonl``.
 """
+import argparse
+
 import jax
 
 from repro.configs import FLConfig, get_wrn_config
@@ -11,7 +17,11 @@ from repro.fl.simulation import FLSimulation
 from repro.models.wrn import make_split_wrn
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable observability and write the trace JSONL")
+    args = ap.parse_args(argv)
     # 1. the paper's model (reduced WRN for CPU) split after group 1
     cfg = get_wrn_config().reduced()
     model = make_split_wrn(cfg)
@@ -35,11 +45,16 @@ def main():
     flcfg = FLConfig(num_clients=4, clients_per_round=4, local_epochs=1,
                      local_batch_size=50, local_lr=0.05,
                      pca_components=24, clusters_per_class=4,
-                     meta_epochs=40, meta_batch_size=8, meta_lr=0.05)
+                     meta_epochs=40, meta_batch_size=8, meta_lr=0.05,
+                     observability=args.trace is not None)
 
     # 4. run Algorithm 1 for a few rounds
     sim = FLSimulation(model, clients, test, flcfg, seed=0)
     res = sim.run(rounds=3, eval_every=1, verbose=True)
+    if args.trace:
+        sim.tracer.write_jsonl(args.trace)
+        print(f"trace: {len(sim.tracer.spans)} spans, "
+              f"{len(sim.tracer.events)} events -> {args.trace}")
 
     frac = res.metadata_counts[-1] / res.comm["total_samples"]
     print(f"\nselected metadata fraction: {frac:.2%}  (paper: ~0.8%)")

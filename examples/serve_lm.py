@@ -4,7 +4,6 @@ with a ring-buffer KV cache (sliding-window layers hold O(window) state).
   PYTHONPATH=src python examples/serve_lm.py --arch gemma3-4b --tokens 24
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +12,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch.steps import make_decode_step
 from repro.models.transformer import LM
+from repro.obs.timing import monotonic
 
 
 def main():
@@ -37,12 +37,12 @@ def main():
                       jnp.int32)
     # warm up / compile
     tok, cache = jit_decode(params, cache, tok)
-    t0 = time.time()
+    t0 = monotonic()
     out = [np.asarray(tok)[:, 0]]
     for _ in range(args.tokens - 1):
         tok, cache = jit_decode(params, cache, tok)
         out.append(np.asarray(tok)[:, 0])
-    dt = time.time() - t0
+    dt = monotonic() - t0
     gen = np.stack(out, 1)
     print(f"arch={cfg.name} (reduced) batch={args.batch} "
           f"cache={args.cache_len}")

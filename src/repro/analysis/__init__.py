@@ -6,6 +6,7 @@ Rule families (see each module's docstring for the full contract):
 * PUR001–PUR004  tracer safety in jitted code    (repro.analysis.purity)
 * PAL001–PAL004  Pallas BlockSpec tiling + VMEM  (repro.analysis.pallas_rules)
 * LED001–LED004  byte-true ledger / wire audit   (repro.analysis.ledger)
+* OBS001         one-wall-clock + balanced spans (repro.analysis.obs_rules)
 * SUP001         reason-less inline suppression  (repro.analysis.core)
 
 Run ``python -m repro.analysis src benchmarks`` (exit 0 against the
@@ -21,6 +22,7 @@ RULE_IDS = (
     "PUR001", "PUR002", "PUR003", "PUR004",
     "PAL001", "PAL002", "PAL003", "PAL004",
     "LED001", "LED002", "LED003", "LED004",
+    "OBS001",
     "SUP001",
 )
 

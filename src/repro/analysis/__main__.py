@@ -17,9 +17,9 @@ import argparse
 import json
 import os
 import sys
-import time
 
 from repro.analysis import RULE_IDS, core
+from repro.obs.timing import monotonic
 
 
 def main(argv=None) -> int:
@@ -51,9 +51,9 @@ def main(argv=None) -> int:
 
     if args.self_test:
         from repro.analysis.selftest import FIXTURES, run_self_test
-        t0 = time.time()
+        t0 = monotonic()
         failures = run_self_test(verbose=not args.as_json)
-        dt = time.time() - t0
+        dt = monotonic() - t0
         print(f"self-test: {len(FIXTURES) - len(failures)}/{len(FIXTURES)} "
               f"fixtures ok in {dt:.2f}s")
         for msg in failures:
@@ -68,10 +68,10 @@ def main(argv=None) -> int:
             print(f"error: no such path: {p}", file=sys.stderr)
             return 2
 
-    t0 = time.time()
+    t0 = monotonic()
     findings = core.run_analysis(paths, root=root,
                                  include_tests=args.include_tests)
-    dt = time.time() - t0
+    dt = monotonic() - t0
 
     if args.write_baseline:
         # suppressionless-reason findings must never be grandfathered

@@ -1,0 +1,131 @@
+"""Observability discipline rule (OBS001).
+
+``repro.obs.timing`` is the repo's ONE wall-clock: warmup-aware,
+device-sync aware, monotonic (``time.time()`` steps under NTP and every
+benchmark that read it measured something slightly different). OBS001
+keeps it that way, and keeps trace spans balanced:
+
+OBS001  (a) a direct stdlib clock read — ``time.time`` /
+        ``perf_counter`` / ``monotonic`` / ``process_time`` (and their
+        ``_ns`` twins), however imported — anywhere outside the
+        ``repro/obs`` package; or
+        (b) an ``obs.span(...)`` / ``obs.timed_block(...)`` opened
+        without a ``with`` block, which would never close the span and
+        corrupt the tracer's stack.
+
+The span check is deliberately narrow — only ``obs.span`` /
+``obs.timed_block`` attribute calls and bare names actually imported from
+``repro.obs`` — so ``re.Match.span()`` and other unrelated ``.span``
+methods never false-positive.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.core import Finding, Module, dotted_name
+
+# stdlib clock attributes that only repro.obs may read
+CLOCK_ATTRS = {"time", "perf_counter", "monotonic", "process_time",
+               "perf_counter_ns", "monotonic_ns", "process_time_ns",
+               "clock"}
+SPAN_OPENERS = {"span", "timed_block"}
+
+
+def _in_obs_package(mod: Module) -> bool:
+    return "obs" in mod.path.replace("\\", "/").split("/")[:-1]
+
+
+def _time_aliases(mod: Module) -> Set[str]:
+    """Names the stdlib ``time`` module is bound to (``time``, ``_time``,
+    ...)."""
+    out: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "time":
+                    out.add(a.asname or a.name)
+    return out
+
+
+def _clock_names(mod: Module) -> Set[str]:
+    """Bare names bound to stdlib clocks via ``from time import ...``."""
+    out: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.module == "time" and node.level == 0:
+                for a in node.names:
+                    if a.name in CLOCK_ATTRS:
+                        out.add(a.asname or a.name)
+    return out
+
+
+def _obs_span_names(mod: Module) -> Set[str]:
+    """Bare names bound to span openers via ``from repro.obs import ...``."""
+    out: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.module in ("repro.obs", "repro.obs.tracer") \
+                    and node.level == 0:
+                for a in node.names:
+                    if a.name in SPAN_OPENERS:
+                        out.add(a.asname or a.name)
+    return out
+
+
+def _with_context_calls(tree: ast.Module) -> Set[int]:
+    """ids of Call nodes that are ``with`` context expressions."""
+    out: Set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                if isinstance(item.context_expr, ast.Call):
+                    out.add(id(item.context_expr))
+    return out
+
+
+def check(mod: Module) -> List[Finding]:
+    if _in_obs_package(mod):
+        return []
+    findings: List[Finding] = []
+    time_aliases = _time_aliases(mod)
+    clock_names = _clock_names(mod)
+    span_names = _obs_span_names(mod)
+    with_calls = _with_context_calls(mod.tree)
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        # (a) direct stdlib clock reads
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in CLOCK_ATTRS \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id in time_aliases:
+            findings.append(Finding(
+                rule="OBS001", path=mod.path, line=node.lineno,
+                message=f"direct stdlib clock read "
+                        f"`{name}()` outside repro.obs",
+                hint="use repro.obs.timing.monotonic (or timeit for "
+                     "warmup-aware benchmarking)"))
+            continue
+        if isinstance(node.func, ast.Name) and node.func.id in clock_names:
+            findings.append(Finding(
+                rule="OBS001", path=mod.path, line=node.lineno,
+                message=f"direct stdlib clock read `{node.func.id}()` "
+                        f"outside repro.obs",
+                hint="use repro.obs.timing.monotonic (or timeit for "
+                     "warmup-aware benchmarking)"))
+            continue
+        # (b) span opened without `with`
+        is_span_call = (
+            name in ("obs.span", "obs.timed_block")
+            or (isinstance(node.func, ast.Name)
+                and node.func.id in span_names))
+        if is_span_call and id(node) not in with_calls:
+            findings.append(Finding(
+                rule="OBS001", path=mod.path, line=node.lineno,
+                message=f"`{name}(...)` opened outside a `with` block",
+                hint="spans must close on the tracer's stack: "
+                     "`with obs.span(...) as sp:`"))
+    return findings

@@ -324,6 +324,48 @@ def f(key):
     y = jax.random.uniform(key, (4,))  # @flcheck@: disable=RNG002 (A/B same-stream comparison)
     return x + y
 """}),
+    Fixture("obs001_naked_clock", "OBS001", {"mod.py": """
+import time
+
+def f():
+    t0 = time.perf_counter()
+    return time.perf_counter() - t0
+"""}),
+    Fixture("obs001_from_import_clock", "OBS001", {"mod.py": """
+from time import perf_counter
+
+def f():
+    return perf_counter()
+"""}),
+    Fixture("obs001_clock_inside_obs_ok", None, {"obs/timing.py": """
+import time as _time
+
+monotonic = _time.perf_counter
+
+def now():
+    return _time.perf_counter()
+"""}),
+    Fixture("obs001_span_without_with", "OBS001", {"mod.py": """
+from repro import obs
+
+def f():
+    sp = obs.span("round")
+    return sp
+"""}),
+    Fixture("obs001_span_with_ok", None, {"mod.py": """
+from repro import obs
+
+def f():
+    with obs.span("round") as sp:
+        sp.set(x=1)
+"""}),
+    Fixture("obs001_re_match_span_ok", None, {"mod.py": """
+import re
+
+def f(s):
+    m = re.match(r"x+", s)
+    return m.span()
+"""}),
 ]
 
 

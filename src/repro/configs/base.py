@@ -234,6 +234,14 @@ class FLConfig:
                                        # byte-identical to the pre-CRC wire;
                                        # chaos runs turn it on to make every
                                        # in-flight corruption detectable.
+    # --- observability (repro.obs; span trace + metrics + kernel timing) ---
+    observability: bool = False        # off: every obs hook is a NullTracer
+                                       # no-op and runs stay bit-identical,
+                                       # ledger included. On: FLSimulation
+                                       # owns a Tracer (sim.tracer) emitting
+                                       # schema-versioned JSONL; see
+                                       # `python -m repro.obs` and README
+                                       # "Observability".
 
 
 @dataclass(frozen=True)

@@ -39,6 +39,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.configs.base import FLConfig
 from repro.core import fedavg as fa
 from repro.core.selection import (Selection, select_metadata,
@@ -206,7 +207,8 @@ def select_cohort(model: SplitModel, params: PyTree, xs: jnp.ndarray,
     gather=False returns (acts (B, N, ...), Selection) — the full cohort's
     activation stack, so only the per-chunk PIPELINE intermediates are
     bounded. gather=True returns the per-client metadata
-    (sel_acts (B, CK, ...), sel_ys (B, CK), valid (B, CK)) with each
+    (sel_acts (B, CK, ...), sel_ys (B, CK), valid (B, CK),
+    lloyd_iters (B,)) with each
     chunk's activations/features gathered down and DROPPED before the next
     chunk runs — the mega-cohort mode, where device memory holds the input
     stack plus one chunk's activations, never the cohort's.
@@ -230,7 +232,7 @@ def select_cohort(model: SplitModel, params: PyTree, xs: jnp.ndarray,
                                        sel_keys[lo:hi], cfg, num_classes)
         if gather:
             return (take0(acts, sels.indices), take0(ys[lo:hi], sels.indices),
-                    sels.valid)
+                    sels.valid, sels.lloyd_iters)
         return acts, sels
 
     if chunk_size <= 0 or chunk_size >= b:
@@ -363,20 +365,35 @@ def cohort_round(model: SplitModel, params: PyTree,
     if client_ids is None:
         client_ids = list(range(b))
 
-    sel_acts, sel_ys, valid = select_cohort(
-        model, params, xs, ys, keys, cfg, num_classes,
-        chunk_size=chunk_size, mesh=mesh, gather=True)
+    with obs.span("select", clients=b) as ssp:
+        sel_acts, sel_ys, valid, lloyd_iters = select_cohort(
+            model, params, xs, ys, keys, cfg, num_classes,
+            chunk_size=chunk_size, mesh=mesh, gather=True)
+        ssp.sync(valid)
+        if ssp.enabled:
+            from repro.core.rounds import emit_selection_sketch
+            vnp = np.asarray(valid)
+            ssp.set(selected=int(vnp.sum()),
+                    lloyd_iters=np.asarray(lloyd_iters).tolist())
+            for i, cid in enumerate(client_ids):
+                emit_selection_sketch(vnp[i], num_classes,
+                                      cfg.clusters_per_class, int(cid),
+                                      xs[i].shape[0])
 
-    metadatas = channel.upload_knowledge_batched(
-        [int(c) for c in client_ids], sel_acts, sel_ys, valid,
-        T.knowledge_codec(cfg))
+    with obs.span("transport", clients=b) as tsp:
+        metadatas = tsp.sync(channel.upload_knowledge_batched(
+            [int(c) for c in client_ids], sel_acts, sel_ys, valid,
+            T.knowledge_codec(cfg)))
 
-    cparams, losses = local_update_cohort(model, params, xs, ys, keys, cfg,
-                                          mesh=mesh)
+    with obs.span("local_update", clients=b) as lsp:
+        cparams, losses = local_update_cohort(model, params, xs, ys, keys,
+                                              cfg, mesh=mesh)
+        lsp.sync(cparams)
     client_params = [jax.tree.map(lambda a, i=i: a[i], cparams)
                      for i in range(b)]
-    for cid, p in zip(client_ids, client_params):
-        channel.upload_update(int(cid), p)
+    with obs.span("transport", clients=b):
+        for cid, p in zip(client_ids, client_params):
+            channel.upload_update(int(cid), p)
     return client_params, metadatas, [float(l) for l in np.asarray(losses)]
 
 

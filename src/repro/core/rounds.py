@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import FLConfig
 from repro.core import fedavg as fa
 from repro.core import meta_training as mt
@@ -75,7 +76,8 @@ def select_for_clients(model: SplitModel, params: PyTree,
     mesh with a ``data`` axis) shards the client axis across devices with
     ``shard_map``.
 
-    Returns a list of (x_k, y_k, (sel_acts_k, sel_y_k, valid_k)) per
+    Returns a list of (x_k, y_k, (sel_acts_k, sel_y_k, valid_k),
+    lloyd_iters_k) per
     client (device-resident, so ``client_round`` neither re-transfers nor
     re-selects), or None when selection/batching is off or the cohort is
     ragged (different data shapes) — callers then fall back to the
@@ -96,11 +98,30 @@ def select_for_clients(model: SplitModel, params: PyTree,
                                   len(clients),
                                   data_axis=D.data_axis_size(mesh))
     xs, ys = D.cohort_arrays(clients)
-    sel_acts, sel_ys, valid = D.select_cohort(
+    sel_acts, sel_ys, valid, lloyd_iters = D.select_cohort(
         model, params, xs, ys, keys, cfg, num_classes, chunk_size=chunk,
         mesh=mesh, gather=True)
-    return [(xs[i], ys[i], (sel_acts[i], sel_ys[i], valid[i]))
+    return [(xs[i], ys[i], (sel_acts[i], sel_ys[i], valid[i]),
+             lloyd_iters[i])
             for i in range(len(clients))]
+
+
+def emit_selection_sketch(valid, num_classes: int, clusters_per_class: int,
+                          client_id: int, n_k: int) -> None:
+    """Persist one client's selection sketch into the trace: the class x
+    cluster occupancy bitmap (which §3.1 slots produced a representative)
+    plus the selected fraction |D_Mk|/|D_k|. Emitted BEFORE the transport
+    encode — the wire compacts the bitmap to the valid rows, so this is
+    the only place the (CK,) slot structure still exists. The event nests
+    under the open ``select`` span, so the round index is its ancestry."""
+    v = np.asarray(valid).astype(bool).reshape(-1)
+    if v.size != num_classes * clusters_per_class:
+        return   # Table-2 baseline ships a per-sample mask, not slots
+    obs.event("selection_sketch", client=int(client_id),
+              occupancy=v.reshape(num_classes,
+                                  clusters_per_class).astype(int).tolist(),
+              selected=int(v.sum()),
+              selected_fraction=float(v.sum() / max(n_k, 1)))
 
 
 def epoch_permutations(key: jax.Array, n: int, epochs: int) -> jnp.ndarray:
@@ -149,41 +170,66 @@ def client_round(model: SplitModel, params: PyTree, client: ClientData,
     from repro.fl import transport as T
     if channel is None:
         channel = T.Channel(ledger, checksum=cfg.transport_checksum)
+    lloyd_it = None
     if precomputed is not None:
-        x, y, metadata = precomputed
+        if len(precomputed) == 4:      # select_for_clients adds lloyd_iters
+            x, y, metadata, lloyd_it = precomputed
+        else:
+            x, y, metadata = precomputed
     else:
         x, y = jnp.asarray(client.data.x), jnp.asarray(client.data.y)
         metadata = None
     k_sel, k_loc = jax.random.split(key)
 
-    # ---- Extract & Selection (uses ONLY the lower part W_G^l(t-1)) ----
-    codec = T.knowledge_codec(cfg)
-    if cfg.use_selection:
-        if metadata is None:
-            acts = model.apply_lower(params, x)                   # A_k^[j]
-            sel = select_metadata(
-                acts, y, k_sel, num_classes=num_classes,
-                clusters_per_class=cfg.clusters_per_class,
-                pca_components=cfg.pca_components,
-                kmeans_iters=cfg.kmeans_iters,
-                use_pallas=cfg.use_pallas_selection,
-                pca_solver=cfg.pca_solver)
-            metadata = (jnp.take(acts, sel.indices, axis=0),
-                        jnp.take(y, sel.indices, axis=0), sel.valid)
-        metadata = channel.upload_knowledge(client_id, *metadata, codec)
-    else:
-        # Table 2 baseline: ALL activation maps are uploaded.
-        acts = model.apply_lower(params, x)
-        metadata = channel.upload_knowledge(
-            client_id, acts, y, jnp.ones((x.shape[0],), bool), codec)
+    with obs.span("client", client=int(client_id)) as csp:
+        # ---- Extract & Selection (uses ONLY the lower part W_G^l(t-1)) --
+        codec = T.knowledge_codec(cfg)
+        with obs.span("select") as ssp:
+            if cfg.use_selection:
+                if metadata is None:
+                    acts = model.apply_lower(params, x)           # A_k^[j]
+                    sel = select_metadata(
+                        acts, y, k_sel, num_classes=num_classes,
+                        clusters_per_class=cfg.clusters_per_class,
+                        pca_components=cfg.pca_components,
+                        kmeans_iters=cfg.kmeans_iters,
+                        use_pallas=cfg.use_pallas_selection,
+                        pca_solver=cfg.pca_solver)
+                    metadata = (jnp.take(acts, sel.indices, axis=0),
+                                jnp.take(y, sel.indices, axis=0), sel.valid)
+                    lloyd_it = sel.lloyd_iters
+                if ssp.enabled:
+                    emit_selection_sketch(metadata[2], num_classes,
+                                          cfg.clusters_per_class,
+                                          client_id, x.shape[0])
+                metadata = ssp.sync(
+                    channel.upload_knowledge(client_id, *metadata, codec))
+            else:
+                # Table 2 baseline: ALL activation maps are uploaded.
+                acts = model.apply_lower(params, x)
+                metadata = ssp.sync(channel.upload_knowledge(
+                    client_id, acts, y, jnp.ones((x.shape[0],), bool),
+                    codec))
+            if ssp.enabled and metadata is not None:
+                n_sel = int(np.asarray(metadata[2]).sum())
+                ssp.set(selected=n_sel,
+                        selected_fraction=n_sel / max(x.shape[0], 1))
+                if lloyd_it is not None:
+                    ssp.set(lloyd_iters=int(lloyd_it))
 
-    # ---- LocalUpdate ----
-    bx, by = local_batches(x, y, k_loc, cfg)
-    opt = sgd(cfg.local_lr)
-    new_params, _, losses = fa.local_update(
-        params, opt, opt.init(params), (bx, by),
-        lambda p, b: model.loss(p, b))
-    channel.upload_update(client_id, new_params)
+        # ---- LocalUpdate ----
+        with obs.span("local_update") as lsp:
+            bx, by = local_batches(x, y, k_loc, cfg)
+            opt = sgd(cfg.local_lr)
+            new_params, _, losses = fa.local_update(
+                params, opt, opt.init(params), (bx, by),
+                lambda p, b: model.loss(p, b))
+            lsp.sync(new_params)
+            if lsp.enabled:
+                lsp.set(steps=int(bx.shape[0]))
+        channel.upload_update(client_id, new_params)
+        if csp.enabled:
+            csp.set(samples=int(x.shape[0]))
     return new_params, metadata, float(losses.mean())
 
 
@@ -213,10 +259,12 @@ def server_round(model: SplitModel, prev_global: PyTree, upper_init: PyTree,
         # nothing arrived: W_S^u(t) stays W_G^u(0)
         upper, meta_losses = upper_init, jnp.zeros((0,))
     else:
-        upper, meta_losses = mt.meta_train(
-            upper_init, model.upper_loss, acts, ys,
-            epochs=cfg.meta_epochs, batch_size=cfg.meta_batch_size,
-            lr=cfg.meta_lr, l2=cfg.meta_l2, key=key, valid=valid)
+        with obs.span("meta_train", rows=int(acts.shape[0])) as msp:
+            upper, meta_losses = mt.meta_train(
+                upper_init, model.upper_loss, acts, ys,
+                epochs=cfg.meta_epochs, batch_size=cfg.meta_batch_size,
+                lr=cfg.meta_lr, l2=cfg.meta_l2, key=key, valid=valid)
+            msp.sync(upper)
 
     # ModelCompose: lower layers from W_G^l(t-1), upper from W_S^u(t)
     composed = model.merge(model.split(prev_global)[0], upper)

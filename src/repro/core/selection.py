@@ -169,6 +169,8 @@ class KMeansState(NamedTuple):
     assignment: jnp.ndarray    # (N,) int32
     distances: jnp.ndarray     # (N,) squared dist to own centroid
     cluster_sizes: jnp.ndarray # (K,)
+    iters: Optional[jnp.ndarray] = None  # () int32 Lloyd sweeps executed
+    #   (early convergence exit < cap); None on paths that don't count
 
 
 def _pairwise_sq_dists(x: jnp.ndarray, c: jnp.ndarray,
@@ -197,9 +199,11 @@ def _lloyd_iterate(x: jnp.ndarray, c0: jnp.ndarray, lmask: jnp.ndarray,
     ``iters`` cap). Early exit is bit-identical to running all sweeps: once
     ``new_c == c``, every later sweep recomputes exactly the same state.
 
-    Returns (centroids, (assign, mindist, sums, counts)) — the final
-    sweep's statistics ride through the while_loop carry, so callers get
-    them WITHOUT a separate post-loop ``_lloyd_step``. On a convergence
+    Returns (centroids, (assign, mindist, sums, counts), sweeps) — the
+    final sweep's statistics ride through the while_loop carry, so callers
+    get them WITHOUT a separate post-loop ``_lloyd_step``, and ``sweeps``
+    is the () int32 count of Lloyd iterations actually executed (the
+    early-exit telemetry the obs trace reports per client). On a convergence
     exit the carried stats were computed at centroids equal to the returned
     ones (``newc == c``), so they ARE the final stats; only a cap exit
     (non-converged after ``iters`` sweeps, whose carried stats belong to
@@ -230,13 +234,13 @@ def _lloyd_iterate(x: jnp.ndarray, c0: jnp.ndarray, lmask: jnp.ndarray,
     stats0 = (jnp.zeros((n,), jnp.int32), jnp.zeros((n,), x.dtype),
               jnp.zeros((k, x.shape[1]), jnp.float32),
               jnp.zeros((k,), x.dtype))
-    _, c, stats, done = jax.lax.while_loop(
+    i, c, stats, done = jax.lax.while_loop(
         cond, body, (0, c0, stats0, jnp.asarray(False)))
     # cap exit (or iters == 0, where the loop never ran): the carried stats
     # lag the returned centroids by one sweep — recompute at c
     stats = jax.lax.cond(done, lambda: stats,
                          lambda: _lloyd_step(x, c, lmask, use_pallas))
-    return c, stats
+    return c, stats, jnp.asarray(i, jnp.int32)
 
 
 def kmeans_init(x: jnp.ndarray, k: int, key: jax.Array,
@@ -291,9 +295,9 @@ def kmeans(x: jnp.ndarray, k: int, key: jax.Array, iters: int = 25,
     valid = (jnp.ones((n,), bool) if mask is None else mask.astype(bool))
     lmask = jnp.where(valid, 0.0, BIG)[:, None] * jnp.ones((1, k), x.dtype)
     c0 = kmeans_init(x, k, key, mask, use_pallas=use_pallas)
-    c, (assign, own, _, sizes) = _lloyd_iterate(x, c0, lmask, iters,
-                                                use_pallas)
-    return KMeansState(c, assign, own, sizes)
+    c, (assign, own, _, sizes), it = _lloyd_iterate(x, c0, lmask, iters,
+                                                    use_pallas)
+    return KMeansState(c, assign, own, sizes, it)
 
 
 def representatives(x: jnp.ndarray, km: KMeansState,
@@ -326,6 +330,9 @@ class Selection(NamedTuple):
     indices: jnp.ndarray       # (num_classes*K,) indices into the client's data
     valid: jnp.ndarray         # (num_classes*K,) bool — cluster non-empty
     features: jnp.ndarray      # (N, P) the PCA features (for diagnostics)
+    lloyd_iters: Optional[jnp.ndarray] = None  # () int32 Lloyd sweeps run
+    #   (always populated by select_metadata*; defaulted so 3-positional
+    #   constructions keep working)
 
 
 def _fit_features(acts: jnp.ndarray, pca_components: int, pca_solver: str):
@@ -367,7 +374,7 @@ def select_metadata(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
                     use_pallas=use_pallas)
         idx = representatives(feats, km, use_pallas=use_pallas)
         valid = km.cluster_sizes[jnp.arange(clusters_per_class)] > 0
-        return Selection(idx, valid, feats)
+        return Selection(idx, valid, feats, km.iters)
 
     kk = clusters_per_class
     ck = num_classes * kk
@@ -386,8 +393,8 @@ def select_metadata(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
     lmask = jnp.where(labels[:, None] == slot_class[None, :], 0.0,
                       BIG).astype(feats.dtype)
 
-    c, (assign, own, _, sizes) = _lloyd_iterate(feats, c0, lmask,
-                                                kmeans_iters, use_pallas)
+    c, (assign, own, _, sizes), lloyd_it = _lloyd_iterate(
+        feats, c0, lmask, kmeans_iters, use_pallas)
 
     # representatives from the same sweep: per-slot argmin of own distance
     same = assign[:, None] == jnp.arange(ck)[None, :]
@@ -405,7 +412,7 @@ def select_metadata(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
                       _pairwise_sq_dists(feats, c, use_pallas), BIG)
     empty = sizes <= 0
     idx = jnp.where(empty, jnp.argmin(dfull, axis=0).astype(jnp.int32), idx)
-    return Selection(idx, sizes > 0, feats)
+    return Selection(idx, sizes > 0, feats, lloyd_it)
 
 
 def select_metadata_batched(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
@@ -486,11 +493,14 @@ def select_metadata_reference(acts: jnp.ndarray,
         sizes = (jax.nn.one_hot(assign, k) * valid[:, None]).sum(0)
         return KMeansState(c, assign, own, sizes)
 
+    # the seed loop always runs all sweeps — populate lloyd_iters anyway so
+    # reference and fused Selections have the same pytree structure
+    ran = jnp.asarray(kmeans_iters, jnp.int32)
     if not per_class or labels is None:
         km = seed_kmeans(feats, clusters_per_class, key, kmeans_iters)
         idx = representatives(feats, km)
         valid = km.cluster_sizes[jnp.arange(clusters_per_class)] > 0
-        return Selection(idx, valid, feats)
+        return Selection(idx, valid, feats, ran)
 
     keys = jax.random.split(key, num_classes)
 
@@ -501,7 +511,7 @@ def select_metadata_reference(acts: jnp.ndarray,
         return idx, km.cluster_sizes > 0
 
     idxs, valids = jax.vmap(one_class)(jnp.arange(num_classes), keys)
-    return Selection(idxs.reshape(-1), valids.reshape(-1), feats)
+    return Selection(idxs.reshape(-1), valids.reshape(-1), feats, ran)
 
 
 def selected_fraction(sel: Selection, n_total: int) -> jnp.ndarray:

@@ -36,6 +36,7 @@ from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.fl.comms import DUPLICATE, RETRANSMIT, CommLedger
 from repro.fl.transport.channel import Channel
 from repro.fl.transport.errors import FrameError
@@ -179,6 +180,13 @@ class FaultyChannel(Channel):
              detail: str = "") -> None:
         self.log.append(FaultEvent(self.round_idx, int(client_id), frame,
                                    kind, attempt, detail))
+        # mirror into the trace (no-ops when observability is off): every
+        # fault-log line becomes a point event + a counter, so chaos traces
+        # carry the same counts BENCH_faults.json reports
+        obs.event("fault." + kind, round=self.round_idx,
+                  client=int(client_id), frame=frame, attempt=attempt,
+                  detail=detail)
+        obs.inc("fault." + kind)
 
     def _perturb(self, wire: bytes,
                  rng: np.random.Generator) -> Tuple[bytes, Optional[str]]:
@@ -207,11 +215,13 @@ class FaultyChannel(Channel):
                 self._stats["retransmits"] += 1
                 self._stats["backoff_s"] += (self.plan.backoff_base
                                              * 2.0 ** (attempt - 1))
+                obs.inc("fault.retransmits")
             self.ledger.upload(cat, len(wire))
             delivered, event = self._perturb(wire, rng)
             if event is not None:
                 self._stats["injected_corruptions"] += 1
                 self.total_injected_corruptions += 1
+                obs.inc("fault.injected_corruptions")
             if rng.random() < self.plan.duplicate_rate:
                 # the network clones the delivery; the receiver dedups but
                 # the clone's bytes were real traffic

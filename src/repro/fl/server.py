@@ -26,6 +26,7 @@ from typing import Any, List, Optional, Sequence
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.base import FLConfig
 from repro.core.rounds import server_round, RoundResult
 from repro.core.split import SplitModel
@@ -148,9 +149,15 @@ class FLServer:
             if arrived is not None:
                 ok &= np.asarray(arrived, bool)
             weights = [1.0 if o else 0.0 for o in ok]
-        res = server_round(self.model, self.global_params, self.upper_init,
-                           client_params, metadatas, self.cfg, key,
-                           fedavg_weights=weights)
+        with obs.span("aggregate", clients=len(client_params)) as asp:
+            res = server_round(self.model, self.global_params,
+                               self.upper_init, client_params, metadatas,
+                               self.cfg, key, fedavg_weights=weights)
+            asp.sync(res.global_params)
+            if asp.enabled:
+                asp.set(zero_weighted=(0 if weights is None
+                                       else weights.count(0.0)),
+                        metadata_count=res.metadata_count)
         self.global_params = res.global_params
         self.round_idx += 1
         return res

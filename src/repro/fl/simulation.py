@@ -20,14 +20,15 @@ round math, sampling streams and ledger are bit-identical to the
 fault-free simulator."""
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.base import FLConfig
+from repro.obs.timing import monotonic
 from repro.core.compose import evaluate
 from repro.core.rounds import run_cohort
 from repro.core.split import SplitModel
@@ -55,6 +56,12 @@ class SimulationResult:
     corruptions_detected: List[int] = field(default_factory=list)
     retransmits: List[int] = field(default_factory=list)
     quarantined: List[int] = field(default_factory=list)       # held out/round
+    # --- observability (populated only when cfg.observability; else None,
+    # so BENCH JSONs stop re-deriving round timing ad hoc) ---
+    round_wall_s: Optional[List[float]] = None                 # per-round wall
+    phase_wall_s: Optional[List[Dict[str, float]]] = None      # per-round
+    #   {phase name -> seconds} from the round span's direct children
+    #   (broadcast / cohort / aggregate / eval)
 
     @property
     def selected_fraction(self) -> float:
@@ -76,7 +83,8 @@ class FLSimulation:
                  mesh=None, deadline: Optional[float] = None,
                  flops_per_sample: float = 1e9,
                  fault_plan=None, fault_seed: int = 0,
-                 quarantine_after: int = 0, quarantine_cooldown: int = 5):
+                 quarantine_after: int = 0, quarantine_cooldown: int = 5,
+                 tracer=None):
         self.model, self.cfg, self.test = model, cfg, test
         self.mesh = mesh                 # 'data'-axis mesh for sharded selection
         key = jax.random.PRNGKey(seed)
@@ -89,6 +97,18 @@ class FLSimulation:
         self.server = FLServer(model, params, upper0, cfg, deadline=deadline,
                                quarantine_after=quarantine_after,
                                quarantine_cooldown=quarantine_cooldown)
+        # observability: with the knob on the simulation owns a Tracer and
+        # the ledger is swapped for the metered twin BEFORE the channel is
+        # built, so every wire charge attributes to the span that made it.
+        # Off (the default) the NullTracer leaves the plain CommLedger in
+        # place — byte- and bit-identical to the uninstrumented runtime.
+        if tracer is None:
+            tracer = (obs.Tracer(meta={"seed": seed,
+                                       "num_clients": len(clients)})
+                      if cfg.observability else obs.NULL_TRACER)
+        self.tracer = tracer
+        if self.tracer.enabled:
+            self.server.ledger = obs.MeteredLedger(self.tracer)
         # the wire every frame crosses: perfect, or fault-injecting under a
         # FaultPlan (its own seed, so fault schedules and FL randomness are
         # independent streams)
@@ -120,64 +140,88 @@ class FLSimulation:
     def run(self, rounds: int, eval_every: int = 1,
             verbose: bool = False) -> SimulationResult:
         res = SimulationResult()
-        t0 = time.time()
+        tracer = self.tracer
+        if tracer.enabled:
+            res.round_wall_s, res.phase_wall_s = [], []
+        t0 = monotonic()
         total_samples = sum(len(c.client.data) for c in self.clients)
-        for t in range(rounds):
-            self.key, k_round, k_sample = jax.random.split(self.key, 3)
-            res.quarantined.append(
-                self.server.num_quarantined(len(self.clients)))
-            self.channel.begin_round(t)
-            idx = self.server.sample_clients(len(self.clients), k_sample)
-            # per-client keys keep the seed's streams (split count changes
-            # every key, so the count must stay len(idx)); the aggregate
-            # key is derived separately — it used to alias the last
-            # client's key
-            keys = jax.random.split(k_round, len(idx))
-            # flcheck: disable=RNG001 (deliberate: the server key must be derived from k_round without changing the historical split count; fold_in(k_round, len(idx)) is disjoint from every split stream)
-            k_server = jax.random.fold_in(k_round, len(idx))
-            cohort = [self.clients[int(i)] for i in idx]
-            # the formed cohort downloads W_G(t-1) NOW (round 0 included)
+        with obs.use_tracer(tracer):
+            for t in range(rounds):
+                with obs.span("round", round=t) as rsp:
+                    self._run_round(t, rounds, eval_every, verbose, res, rsp)
+                if tracer.enabled:
+                    res.round_wall_s.append(rsp.duration)
+                    res.phase_wall_s.append(tracer.child_durations(rsp))
+        res.comm = self.server.ledger.summary()
+        res.comm["total_samples"] = total_samples
+        res.wall_time = monotonic() - t0
+        return res
+
+    def _run_round(self, t: int, rounds: int, eval_every: int,
+                   verbose: bool, res: SimulationResult, rsp) -> None:
+        self.key, k_round, k_sample = jax.random.split(self.key, 3)
+        n_quar = self.server.num_quarantined(len(self.clients))
+        res.quarantined.append(n_quar)
+        obs.gauge("fl.quarantined", n_quar)
+        self.channel.begin_round(t)
+        idx = self.server.sample_clients(len(self.clients), k_sample)
+        # per-client keys keep the seed's streams (split count changes
+        # every key, so the count must stay len(idx)); the aggregate
+        # key is derived separately — it used to alias the last
+        # client's key
+        keys = jax.random.split(k_round, len(idx))
+        # flcheck: disable=RNG001 (deliberate: the server key must be derived from k_round without changing the historical split count; fold_in(k_round, len(idx)) is disjoint from every split stream)
+        k_server = jax.random.fold_in(k_round, len(idx))
+        cohort = [self.clients[int(i)] for i in idx]
+        # the formed cohort downloads W_G(t-1) NOW (round 0 included)
+        with obs.span("broadcast", clients=len(cohort)):
             self.server.broadcast_weights(len(cohort), channel=self.channel)
+        with obs.span("cohort", clients=len(cohort)) as csp:
             cparams, metas, losses = self._cohort_round(
                 cohort, keys, client_ids=[int(i) for i in idx])
-            # arrival mask: which UpperUpdate frames actually decoded (the
-            # perfect wire says all); where a corrupted frame was silently
-            # accepted (checksums off) the server must consume ITS decode,
-            # not the client's in-memory params
-            arrived = np.asarray(
-                [self.channel.update_arrived(int(i)) for i in idx])
-            for j, i in enumerate(idx):
-                dec = self.channel.decoded_update(int(i))
-                if dec is not None:
-                    cparams[j] = dec
-            # deadline policy: estimated local times decide who the server
-            # stops waiting for (mask=None -> exact unweighted Eq. 2)
-            mask = self.server.straggler_mask(
-                [c.local_time(self.cfg, self.flops_per_sample)
-                 for c in cohort])
-            res.straggler_counts.append(0 if mask is None else int(mask.sum()))
-            rr = self.server.aggregate(cparams, metas, k_server,
-                                       stragglers=mask, arrived=arrived)
-            self.server.record_arrivals([int(i) for i in idx], arrived)
-            stats = self.channel.round_stats()
-            res.drops.append(int((~arrived).sum()))
-            res.corruptions_detected.append(stats["corruptions_detected"])
-            res.retransmits.append(stats["retransmits"])
-            res.client_loss.append(float(np.mean(losses)))
-            res.metadata_counts.append(rr.metadata_count)
-            res.cohort_samples.append(
-                sum(len(c.client.data) for c in cohort))
-            if (t + 1) % eval_every == 0 or t == rounds - 1:
+            csp.sync(cparams)
+        # arrival mask: which UpperUpdate frames actually decoded (the
+        # perfect wire says all); where a corrupted frame was silently
+        # accepted (checksums off) the server must consume ITS decode,
+        # not the client's in-memory params
+        arrived = np.asarray(
+            [self.channel.update_arrived(int(i)) for i in idx])
+        for j, i in enumerate(idx):
+            dec = self.channel.decoded_update(int(i))
+            if dec is not None:
+                cparams[j] = dec
+        tracer_on = self.tracer.enabled
+        # deadline policy: estimated local times decide who the server
+        # stops waiting for (mask=None -> exact unweighted Eq. 2)
+        mask = self.server.straggler_mask(
+            [c.local_time(self.cfg, self.flops_per_sample)
+             for c in cohort])
+        n_late = 0 if mask is None else int(mask.sum())
+        res.straggler_counts.append(n_late)
+        obs.gauge("fl.stragglers", n_late)
+        rr = self.server.aggregate(cparams, metas, k_server,
+                                   stragglers=mask, arrived=arrived)
+        self.server.record_arrivals([int(i) for i in idx], arrived)
+        stats = self.channel.round_stats()
+        res.drops.append(int((~arrived).sum()))
+        res.corruptions_detected.append(stats["corruptions_detected"])
+        res.retransmits.append(stats["retransmits"])
+        res.client_loss.append(float(np.mean(losses)))
+        res.metadata_counts.append(rr.metadata_count)
+        res.cohort_samples.append(
+            sum(len(c.client.data) for c in cohort))
+        if tracer_on:
+            rsp.set(clients=len(cohort), drops=res.drops[-1],
+                    stragglers=n_late, quarantined=n_quar,
+                    metadata_count=rr.metadata_count)
+        if (t + 1) % eval_every == 0 or t == rounds - 1:
+            with obs.span("eval"):
                 acc = evaluate(self.model, rr.composed_params,
                                self.test.x, self.test.y)
                 fa_acc = evaluate(self.model, rr.global_params,
                                   self.test.x, self.test.y)
-                res.test_acc.append(acc)
-                res.fedavg_acc.append(fa_acc)
-                if verbose:
-                    print(f"round {t+1:4d}  M_COM acc={acc:.4f}  "
-                          f"FedAvg acc={fa_acc:.4f}  |D_M|={rr.metadata_count}")
-        res.comm = self.server.ledger.summary()
-        res.comm["total_samples"] = total_samples
-        res.wall_time = time.time() - t0
-        return res
+            res.test_acc.append(acc)
+            res.fedavg_acc.append(fa_acc)
+            if verbose:
+                print(f"round {t+1:4d}  M_COM acc={acc:.4f}  "
+                      f"FedAvg acc={fa_acc:.4f}  |D_M|={rr.metadata_count}")

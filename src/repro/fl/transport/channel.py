@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.fl.comms import CommLedger
 from repro.fl.transport.codecs import (Int8Codec, Quantized, TensorCodec,
                                        get_codec)
@@ -109,10 +110,12 @@ class Channel:
         frame bytes, and return what the server DECODES from the wire
         (valid rows only, dequantized f32) — the metadata MetaTraining
         sees. None means the frame never arrived (faulty channels only)."""
-        wire = SelectedKnowledge(acts, labels, valid, codec,
-                                 pre=pre).encode(checksum=self.checksum)
+        with obs.span("encode", frame="knowledge", client=int(client_id)):
+            wire = SelectedKnowledge(acts, labels, valid, codec,
+                                     pre=pre).encode(checksum=self.checksum)
         self.ledger.upload("metadata", len(wire))
-        return SelectedKnowledge.decode(wire)
+        with obs.span("decode", frame="knowledge", client=int(client_id)):
+            return SelectedKnowledge.decode(wire)
 
     def upload_knowledge_batched(self, client_ids: Sequence[int], sel_acts,
                                  sel_ys, valid,

@@ -1,6 +1,14 @@
 """jit'd public wrappers around the Pallas kernels: shape padding/alignment,
 CPU interpret-mode fallback (this container), and the dispatch points the
-model/selection code calls."""
+model/selection code calls.
+
+Each dispatch site sits in an ``obs.timed_block`` span (a no-op when
+``FLConfig.observability`` is off). These wrappers usually run INSIDE a
+jit trace, where ``sp.sync`` sees abstract tracers: it then skips
+``block_until_ready`` and marks the span ``traced`` (the time measured is
+trace/compile time, not device time — kernel spans with ``traced`` absent
+are real eager dispatches, block-until-ready-synced so async device work
+is counted)."""
 from __future__ import annotations
 
 import functools
@@ -8,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode_kernel
 from repro.kernels.flash_attention import flash_attention_kernel
@@ -37,8 +46,10 @@ def kmeans_pairwise_dist(x: jnp.ndarray, c: jnp.ndarray,
     kpad = _pad_to(k, 128)
     xp = jnp.pad(x.astype(jnp.float32), ((0, npad - n), (0, dpad - d)))
     cp = jnp.pad(c.astype(jnp.float32), ((0, kpad - k), (0, dpad - d)))
-    out = kmeans_pairwise_dist_kernel(xp, cp, block_n=block_n,
-                                      interpret=_interpret())
+    with obs.timed_block("kernel.kmeans_pairwise_dist",
+                         n=n, d=d, k=k) as sp:
+        out = sp.sync(kmeans_pairwise_dist_kernel(xp, cp, block_n=block_n,
+                                                  interpret=_interpret()))
     return out[:n, :k]
 
 
@@ -61,8 +72,9 @@ def kmeans_lloyd_step(x: jnp.ndarray, c: jnp.ndarray, lmask: jnp.ndarray,
     cp = jnp.pad(c.astype(jnp.float32), ((0, kpad - k), (0, dpad - d)))
     lp = jnp.pad(lmask.astype(jnp.float32), ((0, npad - n), (0, kpad - k)),
                  constant_values=ref.BIG)
-    assign, mind, sums, counts = kmeans_lloyd_kernel(
-        xp, cp, lp, block_n=block_n, interpret=_interpret())
+    with obs.timed_block("kernel.kmeans_lloyd_step", n=n, d=d, k=k) as sp:
+        assign, mind, sums, counts = sp.sync(kmeans_lloyd_kernel(
+            xp, cp, lp, block_n=block_n, interpret=_interpret()))
     return assign[:n], mind[:n], sums[:k, :d], counts[0, :k]
 
 
@@ -83,8 +95,10 @@ def quantize_affine(x: jnp.ndarray, rowmask: jnp.ndarray,
     xp = jnp.pad(x.astype(jnp.float32), ((0, npad - n), (0, dpad - d)))
     mp = jnp.pad(rowmask.astype(jnp.float32), (0, npad - n))
     mp = jnp.broadcast_to(mp[:, None], (npad, 128))
-    q, mm = quantize_affine_kernel(xp, mp, d_true=d, block_n=block_n,
-                                   interpret=_interpret())
+    with obs.timed_block("kernel.quantize_affine", n=n, d=d) as sp:
+        q, mm = sp.sync(quantize_affine_kernel(xp, mp, d_true=d,
+                                               block_n=block_n,
+                                               interpret=_interpret()))
     xmin, scale = ref.affine_params_from_minmax(mm[0, 0], mm[1, 0])
     return q[:n, :d], xmin, scale
 
@@ -102,10 +116,12 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     qp, kp, vp = pad4(q), pad4(k), pad4(v)
     # scale uses original d: kernel scales by 1/sqrt(dpad) — compensate
     qp = qp * (dpad / d) ** 0.5
-    out = flash_attention_kernel(qp, kp, vp, causal=causal, window=window,
-                                 block_q=min(block_q, spad),
-                                 block_k=min(block_k, spad),
-                                 interpret=_interpret())
+    with obs.timed_block("kernel.flash_attention", b=b, s=s, h=h,
+                         d=d) as sp:
+        out = sp.sync(flash_attention_kernel(
+            qp, kp, vp, causal=causal, window=window,
+            block_q=min(block_q, spad), block_k=min(block_k, spad),
+            interpret=_interpret()))
     return out[:, :s, :, :d]
 
 
@@ -121,6 +137,7 @@ def flash_decode(q, k_cache, v_cache, valid, *, block_s: int = 1024
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, dpad - d))) * (dpad / d) ** 0.5
     kp, vp = padc(k_cache), padc(v_cache)
     vm = jnp.pad(valid, ((0, 0), (0, spad - s)))
-    out = flash_decode_kernel(qp, kp, vp, vm, block_s=blk,
-                              interpret=_interpret())
+    with obs.timed_block("kernel.flash_decode", b=b, s=s, h=h, d=d) as sp:
+        out = sp.sync(flash_decode_kernel(qp, kp, vp, vm, block_s=blk,
+                                          interpret=_interpret()))
     return out[..., :d]

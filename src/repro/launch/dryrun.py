@@ -18,7 +18,6 @@ import argparse
 import dataclasses
 import json
 import sys
-import time
 import traceback
 
 import jax
@@ -31,6 +30,7 @@ from repro.launch.specs import input_specs
 from repro.launch.steps import (make_decode_step, make_prefill_step,
                                 make_train_step)
 from repro.models.registry import count_params
+from repro.obs.timing import monotonic
 
 
 def resolve_mode(cfg, shape_name: str):
@@ -100,7 +100,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod=False, smoke=False,
     mesh = (mesh_lib.make_smoke_mesh(multi_pod=multi_pod) if smoke
             else mesh_lib.make_production_mesh(multi_pod=multi_pod))
     nchips = mesh.devices.size
-    t0 = time.time()
+    t0 = monotonic()
     try:
         step, args, specs, out_shardings = build(
             cfg, shape, mesh, tcfg, cache_seq_shard=cache_seq_shard)
@@ -108,9 +108,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod=False, smoke=False,
             jitted = (jax.jit(step, out_shardings=out_shardings)
                       if out_shardings is not None else jax.jit(step))
             lowered = jitted.lower(*args)
-            t_lower = time.time() - t0
+            t_lower = monotonic() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = monotonic() - t0 - t_lower
 
         mem = None
         try:

@@ -8,9 +8,10 @@ expects the production mesh.
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
+
+from repro.obs.timing import monotonic
 
 
 def main(argv=None):
@@ -51,19 +52,19 @@ def main(argv=None):
         # one compiled program; a production server uses the prefill step)
         prompt = rng.integers(0, cfg.vocab_size,
                               (args.batch, args.prompt_len), np.int32)
-        t0 = time.time()
+        t0 = monotonic()
         tok = jnp.asarray(prompt[:, :1])
         for i in range(1, args.prompt_len):
             _, cache = jit_decode(params, cache, tok)
             tok = jnp.asarray(prompt[:, i:i + 1])
-        t_prefill = time.time() - t0
+        t_prefill = monotonic() - t0
 
         out = []
-        t0 = time.time()
+        t0 = monotonic()
         for _ in range(args.tokens):
             tok, cache = jit_decode(params, cache, tok)
             out.append(np.asarray(tok)[:, 0])
-        dt = time.time() - t0
+        dt = monotonic() - t0
         out = np.stack(out, 1)
     print(f"prompt fed in {t_prefill:.2f}s; generated {args.tokens} tokens x "
           f"batch {args.batch} in {dt:.2f}s "

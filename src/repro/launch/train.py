@@ -11,9 +11,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import numpy as np
+
+from repro.obs.timing import monotonic
 
 
 def main(argv=None):
@@ -74,11 +75,11 @@ def main(argv=None):
                     batch[k2] = jnp.asarray(
                         rng.normal(0, 1, v.shape).astype(np.float32))
             key, sub = jax.random.split(key)
-            t0 = time.time()
+            t0 = monotonic()
             client_params, opt_state, metrics = jit_step(
                 client_params, opt_state, batch, sub)
             metrics = jax.tree.map(float, metrics)
-            print(f"round {t}: {metrics}  ({time.time()-t0:.2f}s)")
+            print(f"round {t}: {metrics}  ({monotonic()-t0:.2f}s)")
             if mgr:
                 avg = jax.tree.map(lambda x: np.asarray(x[0]), client_params)
                 mgr.save(t, avg, {"arch": args.arch})

@@ -1,0 +1,74 @@
+"""repro.obs — observability for the FL runtime: span tracing, a metrics
+registry with a byte-true CommLedger bridge, and block-until-ready-aware
+profiling hooks around the Pallas kernels and round phases.
+
+One knob: ``FLConfig.observability`` (default off).  Off, every hook in
+the runtime resolves to the shared ``NULL_TRACER``/``NULL_SPAN``
+singletons — no jax calls, no device syncs, no allocation — so disabled
+runs are bit-identical to the uninstrumented code, ledger included.  On,
+``FLSimulation`` owns a ``Tracer`` whose trace serializes as
+schema-versioned JSONL (``repro.obs.tracer.SCHEMA``):
+
+    sim = FLSimulation(..., cfg=replace(cfg, observability=True))
+    res = sim.run(rounds=3)
+    sim.tracer.write_jsonl("trace.jsonl")
+    # then: python -m repro.obs summarize trace.jsonl
+    #       python -m repro.obs export-chrome trace.jsonl out.json
+    #       python -m repro.obs diff a.jsonl b.jsonl
+
+Instrumentation idiom (all no-ops when disabled)::
+
+    with obs.timed_block("kernel.kmeans_lloyd", n=n, k=k) as sp:
+        out = kernel(...)
+        out = sp.sync(out)        # block_until_ready only when tracing
+    obs.inc("fault.retransmits")
+    obs.gauge("fl.stragglers", late)
+    obs.event("selection_sketch", client=3, occupancy=...)
+
+Import-safe without jax — the flcheck CI job (no jax installed) imports
+``repro.obs.timing`` through this package.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.obs import timing
+from repro.obs.metrics import (NULL_METRICS, Counter, Gauge, Histogram,
+                               MeteredLedger, MetricsRegistry, NullMetrics)
+from repro.obs.tracer import (NULL_SPAN, NULL_TRACER, SCHEMA, NullTracer,
+                              Span, TraceError, Tracer, get_tracer,
+                              load_trace, span_paths, to_chrome, use_tracer)
+
+__all__ = [
+    "timing", "SCHEMA", "Tracer", "NullTracer", "NULL_TRACER", "Span",
+    "NULL_SPAN", "TraceError", "load_trace", "span_paths", "to_chrome",
+    "get_tracer", "use_tracer", "span", "timed_block", "event", "inc",
+    "gauge", "MetricsRegistry", "NullMetrics", "NULL_METRICS", "Counter",
+    "Gauge", "Histogram", "MeteredLedger",
+]
+
+
+def span(name: str, **attrs: Any):
+    """Open a span on the active tracer (``NULL_SPAN`` when off).  Must
+    be used as a ``with`` item — flcheck OBS001 flags bare calls."""
+    return get_tracer().span(name, **attrs)
+
+
+# Same hook, named for the kernel/phase profiling sites: a timed block
+# whose ``sp.sync(out)`` makes async device work count inside the block.
+timed_block = span
+
+
+def event(name: str, **attrs: Any) -> None:
+    """Record a point event on the active tracer."""
+    get_tracer().event(name, **attrs)
+
+
+def inc(name: str, value: int = 1) -> None:
+    """Increment a counter on the active tracer's metrics registry."""
+    get_tracer().metrics.counter(name).inc(value)
+
+
+def gauge(name: str, value: float) -> None:
+    """Set a gauge on the active tracer's metrics registry."""
+    get_tracer().metrics.gauge(name).set(value)

@@ -363,3 +363,64 @@ def test_cli_exit_codes():
         [sys.executable, "-m", "repro.analysis", "--self-test"],
         cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
     assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ------------------------------------------------------------------ OBS001
+
+def test_obs001_clock_outside_obs_flagged(tmp_path):
+    findings = scan(tmp_path, {"bench.py": """
+import time
+
+def f():
+    t0 = time.perf_counter()
+    return time.time() - t0
+"""})
+    assert len([f for f in findings if f.rule == "OBS001"]) == 2
+
+
+def test_obs001_from_import_and_alias_flagged(tmp_path):
+    findings = scan(tmp_path, {"mod.py": """
+import time as _t
+from time import monotonic
+
+def f():
+    return _t.perf_counter() + monotonic()
+"""})
+    assert len([f for f in findings if f.rule == "OBS001"]) == 2
+
+
+def test_obs001_obs_package_is_exempt(tmp_path):
+    findings = scan(tmp_path, {"obs/timing.py": """
+import time
+
+def now():
+    return time.perf_counter()
+"""})
+    assert "OBS001" not in rules(findings)
+
+
+def test_obs001_span_without_with_flagged(tmp_path):
+    findings = scan(tmp_path, {"mod.py": """
+from repro import obs
+
+def f():
+    sp = obs.span("round")
+    sp2 = obs.timed_block("kernel")
+    return sp, sp2
+"""})
+    assert len([f for f in findings if f.rule == "OBS001"]) == 2
+
+
+def test_obs001_with_span_and_re_match_span_clean(tmp_path):
+    findings = scan(tmp_path, {"mod.py": """
+import re
+
+from repro import obs
+
+def f(s):
+    with obs.span("round") as sp:
+        sp.set(n=1)
+    m = re.match(r"x+", s)
+    return m.span()
+"""})
+    assert "OBS001" not in rules(findings)

@@ -382,10 +382,13 @@ class TestLloydCarriedStats:
         must hand back exactly the stats of a final-sweep recompute."""
         from repro.core.selection import _lloyd_iterate, _lloyd_step
         x, c0, lmask = self._problem()
-        c, stats = _lloyd_iterate(x, c0, lmask, iters, False)
+        c, stats, sweeps = _lloyd_iterate(x, c0, lmask, iters, False)
         want = _lloyd_step(x, c, lmask, False)
         for got, ref_ in zip(stats, want):
             np.testing.assert_array_equal(np.asarray(got), np.asarray(ref_))
+        # the sweep count is the early-exit telemetry the trace reports:
+        # capped runs report the cap, converged runs report fewer
+        assert 0 <= int(sweeps) <= iters
 
     def test_kmeans_non_f32_dtype_traces(self):
         """Regression: the carry's stats0 once hardcoded f32 for mindist/

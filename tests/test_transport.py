@@ -241,7 +241,7 @@ def _expected_round_bytes(model, sim, cfg):
                              keys, sim.num_classes)
     assert pre is not None
     up_m = sum(len(T.SelectedKnowledge(a, l, v, codec).encode())
-               for _, _, (a, l, v) in pre)
+               for _, _, (a, l, v), _ in pre)
     scratch = CommLedger()
     cparams, _, _ = run_cohort(model, sim.server.global_params, cohort,
                                cfg, keys, scratch, sim.num_classes)
