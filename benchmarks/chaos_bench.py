@@ -25,7 +25,6 @@ benchmarks/run.py (``--only faults``).
 """
 from __future__ import annotations
 
-import json
 import os
 
 import numpy as np
@@ -35,6 +34,7 @@ from repro.data import SyntheticImageDataset, partition_k_shards
 from repro.fl.faults import FaultPlan
 from repro.fl.simulation import FLSimulation
 from repro.models.wrn import make_split_wrn
+from repro.obs.registry import write_bench
 from repro.obs.timing import monotonic
 
 ROUNDS = 5
@@ -156,8 +156,7 @@ def run():
 
     out = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_faults.json")
-    with open(out, "w") as f:
-        json.dump(report, f, indent=1)
+    write_bench(out, report)
     return rows, report
 
 

@@ -22,7 +22,6 @@ BENCH_selection.json) and returns the CSV rows for benchmarks/run.py
 """
 from __future__ import annotations
 
-import json
 import os
 
 import numpy as np
@@ -31,6 +30,7 @@ from repro.configs import FLConfig, get_wrn_config
 from repro.data import SyntheticImageDataset, partition_k_shards
 from repro.fl.simulation import FLSimulation
 from repro.models.wrn import make_split_wrn
+from repro.obs.registry import write_bench
 from repro.obs.timing import monotonic
 
 CODECS = ("raw_f32", "f16", "int8")
@@ -147,8 +147,7 @@ def run():
 
     out = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_comms.json")
-    with open(out, "w") as f:
-        json.dump(report, f, indent=1)
+    write_bench(out, report)
     return rows, report
 
 

@@ -1,40 +1,60 @@
 """Observability benchmark -> BENCH_obs.json (``run.py --only obs``).
 
-The tracer's contract has three measurable halves, and this bench measures
+The tracer's contract has four measurable halves, and this bench measures
 all of them on the same multi-round simulation:
 
   * overhead — wall time of a fully-traced run vs the identical disabled
-    run (claim: <= 3%; spans are plain-Python appends and the NullTracer
-    costs one attribute read, so tracing must never tax the runtime)
+    run (claim: <= 3%). Traced/untraced reps run in INTERLEAVED pairs and
+    the claim is judged on the median per-pair overhead with its MAD
+    spread reported alongside: back-to-back per-arm minima put the two
+    arms in different thermal/allocator regimes and once measured the
+    "overhead" at -3.7%, i.e. pure noise.
   * completeness — every byte the CommLedger charged is attributable to
     some span (``Tracer.attributed_bytes()`` equals the ledger's totals
     and the ``unattributed`` bucket is empty). ASSERTED, not just
     reported: a wire charge outside any span is an instrumentation bug.
   * fidelity — the traced run's final weights and ledger summary are
     bit-identical to the untraced run's (observing the run must not
-    change it), plus trace throughput (records/sec) for sizing.
+    change it).
+  * compile discipline — the recompilation sentinel
+    (``obs.profile.profiled_jit``): every hot-path compile lands in round
+    0 of the first traced run; a compile event whose ancestry reaches a
+    ``round > 0`` span is a retrace-per-round bug and fails the bench
+    (claim ``zero_hot_path_recompiles_after_round_0``).
 
-Timing uses the repo clock (``repro.obs.timing``): one warmup run pays
-compile, then best-of-``REPS`` per arm — the same discipline as the other
-benches, which matters here because the claim is a small ratio.
+Trace throughput (``records_per_sec``) is measured in isolation — a
+synthetic span/event storm serialized to a tmpfile — because dividing the
+simulation's span count by the whole simulation wall (once ~2 records/s)
+says nothing about the tracer; the storm number is what actually bounds
+tracer overhead at scale.
+
+Timing uses the repo clock (``repro.obs.timing``); one warmup run per arm
+pays jit compiles AND the profiler's one-time per-signature HLO cost
+extraction before anything is timed. The report is written through
+``repro.obs.registry.write_bench`` (flcheck OBS002), which also appends
+the fingerprinted record to ``experiments/bench_history.jsonl`` for
+``python -m repro.obs regress``.
 """
 from __future__ import annotations
 
-import json
 import os
+import tempfile
 
 import numpy as np
 
+from repro import obs
 from repro.configs import FLConfig, get_wrn_config
 from repro.data import SyntheticImageDataset, partition_k_shards
 from repro.fl.simulation import FLSimulation
 from repro.models.wrn import make_split_wrn
+from repro.obs.registry import write_bench
 from repro.obs.timing import monotonic
 
 ROUNDS = 3
 NUM_CLIENTS, SAMPLES_PER_CLIENT = 3, 150
-REPS = 2                      # best-of per arm, after one warmup run
+REPS = 3                      # interleaved (untraced, traced) pairs
 OVERHEAD_CLAIM = 0.03
+STORM_SPANS = 20000           # synthetic records for the throughput probe
 
 
 def _flcfg(**kw):
@@ -76,21 +96,73 @@ def _weights_equal(a, b):
         bool((np.asarray(x) == np.asarray(y)).all()) for x, y in zip(la, lb))
 
 
+def _median(xs):
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def _trace_throughput(n_spans=STORM_SPANS):
+    """Isolated tracer throughput: open/close ``n_spans`` spans (one event
+    + one byte charge each) and serialize the lot to a tmpfile."""
+    tr = obs.Tracer(meta={"synthetic_storm": True})
+    t0 = monotonic()
+    with obs.use_tracer(tr):
+        for i in range(n_spans):
+            with obs.span("storm", i=i) as sp:
+                obs.event("tick", i=i)
+                sp.charge("up", "knowledge", 64, 1)
+    fd, path = tempfile.mkstemp(suffix=".jsonl")
+    os.close(fd)
+    try:
+        tr.write_jsonl(path)
+    finally:
+        os.unlink(path)
+    dt = monotonic() - t0
+    n_records = len(tr.spans) + len(tr.events)
+    return n_records / max(dt, 1e-9), n_records
+
+
+def _hot_path_compiles(tr):
+    """Partition the trace's sentinel ``compile`` events by the round of
+    their enclosing span's ancestry (None = outside any round: setup,
+    meta-training warmup, eval)."""
+    by_id = {s.span_id: s for s in tr.spans}
+
+    def round_of(ev):
+        pid = ev.get("parent")
+        while pid is not None and pid in by_id:
+            sp = by_id[pid]
+            if "round" in sp.attrs:
+                return sp.attrs["round"]
+            pid = sp.parent_id
+        return None
+
+    comp = [e for e in tr.events if e["name"] == "compile"]
+    hot = [e for e in comp if (round_of(e) or 0) > 0]
+    return comp, hot
+
+
 def run():
     model, clients, test = _setting()
-    # one warmup run pays compile for both arms (identical jaxprs: the
-    # tracer adds no jax operations — that IS the bit-identity claim)
+    # warmups pay jit compiles for both arms (identical jaxprs: the tracer
+    # adds no jax operations — that IS the bit-identity claim); the traced
+    # warmup additionally pays profiled_jit's one-time per-signature AOT
+    # cost extraction, and its cold trace is what the sentinel judges
     _run_once(model, clients, test, False)
+    sim_warm, _, _ = _run_once(model, clients, test, True)
 
-    t_off, t_on = float("inf"), float("inf")
+    pairs = []
     sim_off = sim_on = res_off = res_on = None
     for _ in range(REPS):
-        sim_off, res_off, dt = _run_once(model, clients, test, False)
-        t_off = min(t_off, dt)
-        sim_on, res_on, dt = _run_once(model, clients, test, True)
-        t_on = min(t_on, dt)
-
-    overhead = (t_on - t_off) / t_off
+        sim_off, res_off, dt_off = _run_once(model, clients, test, False)
+        sim_on, res_on, dt_on = _run_once(model, clients, test, True)
+        pairs.append((dt_off, dt_on))
+    overheads = [(on - off) / off for off, on in pairs]
+    overhead = _median(overheads)
+    spread = _median([abs(o - overhead) for o in overheads])   # MAD
+    t_off = min(off for off, _ in pairs)
+    t_on = min(on for _, on in pairs)
 
     # fidelity: observing the run must not change it
     bit_identical = _weights_equal(sim_off.server.global_params,
@@ -112,43 +184,78 @@ def run():
     assert not tr.unattributed, (
         f"bytes charged outside any span: {dict(tr.unattributed)}")
 
+    # recompilation sentinel: judged on the FIRST traced run (cold
+    # signature caches — later reps see every signature already counted)
+    compiles, hot_compiles = _hot_path_compiles(sim_warm.tracer)
+    assert not hot_compiles, (
+        "hot-path recompiles after round 0: "
+        + str([(e["attrs"].get("fn"), e["attrs"].get("signature"))
+               for e in hot_compiles]))
+    compile_counters = {
+        k: v for k, v in
+        sim_warm.tracer.metrics.snapshot()["counters"].items()
+        if k.startswith("compile.") and k.count(".") == 1}
+
+    # cost-annotated spans: the profiled selection call lights up the
+    # cohort 'select' span with measured flops + utilization
+    select_cost = {}
+    for sp in tr.spans:
+        if sp.name == "select" and "flops" in sp.attrs:
+            select_cost = {
+                "flops": sp.attrs["flops"],
+                "hbm_bytes": sp.attrs.get("hbm_bytes"),
+                "utilization": sp.attrs.get("utilization"),
+            }
+            break
+
     n_spans, n_events = len(tr.spans), len(tr.events)
-    records_per_sec = (n_spans + n_events) / max(t_on, 1e-9)
+    records_per_sec, storm_records = _trace_throughput()
     sketches = sum(1 for e in tr.events if e["name"] == "selection_sketch")
 
     report = {
         "rounds": ROUNDS, "clients": NUM_CLIENTS, "reps": REPS,
         "untraced_s": t_off, "traced_s": t_on,
         "overhead_frac": overhead,
+        "overhead_spread": spread,
+        "overhead_pairs": overheads,
         "spans": n_spans, "events": n_events,
         "selection_sketches": sketches,
         "records_per_sec": records_per_sec,
+        "throughput_storm_records": storm_records,
         "attributed_up_bytes": att_up, "attributed_down_bytes": att_down,
+        "compile_events_round_0": len(compiles) - len(hot_compiles),
+        "compile_counters": compile_counters,
+        "select_cost": select_cost,
         "phase_wall_s": res_on.phase_wall_s,
         "round_wall_s": res_on.round_wall_s,
         "claims": {
             "overhead_leq_3pct": overhead <= OVERHEAD_CLAIM,
             "every_ledger_byte_span_attributed": True,   # asserted above
             "traced_run_bit_identical": bool(bit_identical and ledger_equal),
+            "zero_hot_path_recompiles_after_round_0": not hot_compiles,
         },
     }
     rows = [
         ("obs_untraced_s", t_off, None),
         ("obs_traced_s", t_on, None),
-        ("obs_overhead_frac", overhead, f"<= {OVERHEAD_CLAIM} claimed"),
+        ("obs_overhead_frac", overhead,
+         f"median of {REPS} pairs, MAD {spread:.4f}, <= "
+         f"{OVERHEAD_CLAIM} claimed"),
         ("obs_trace_records", float(n_spans + n_events),
          f"{n_spans} spans + {n_events} events"),
-        ("obs_records_per_sec", records_per_sec, None),
+        ("obs_records_per_sec", records_per_sec,
+         f"synthetic storm, {storm_records} records"),
         ("obs_selection_sketches", float(sketches),
          f"{NUM_CLIENTS} clients x {ROUNDS} rounds"),
+        ("obs_compile_events", float(len(compiles)),
+         "all in round 0 / setup (sentinel)"),
     ]
     for claim, ok in report["claims"].items():
         rows.append((f"claim_{claim}", "PASS" if ok else "FAIL", None))
 
     out = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_obs.json")
-    with open(out, "w") as f:
-        json.dump(report, f, indent=1)
+    write_bench(out, report)
     return rows, report
 
 

@@ -1,6 +1,12 @@
 """Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
 
   PYTHONPATH=src python -m benchmarks.roofline_report [--dir experiments/dryrun]
+
+Roofline terms are RECOMPUTED from each record's stored HLO cost via
+``repro.obs.profile`` (the repo's one cost record + roofline calculator)
+rather than read back from the JSON, so the table always reflects the
+current peak table; ``model_flops``/``useful_ratio`` are taken from the
+stored record (they need the arch config the dry-run had in hand).
 """
 from __future__ import annotations
 
@@ -8,6 +14,8 @@ import argparse
 import glob
 import json
 import os
+
+from repro.obs import profile
 
 ARCH_ORDER = ["gemma3-4b", "internvl2-26b", "qwen3-moe-30b-a3b",
               "phi3-medium-14b", "llama3.2-1b", "whisper-medium",
@@ -56,6 +64,7 @@ def load(dir_, multipod=False, tag=""):
 
 
 def roofline_table(recs):
+    peaks = profile.peak_table("tpu")
     lines = ["| arch | shape | compute s | memory s | collective s | bound | "
              "MODEL_FLOPS | useful ratio | what moves the bound |",
              "|---|---|---|---|---|---|---|---|---|"]
@@ -73,12 +82,14 @@ def roofline_table(recs):
                              f"{r.get('error','')[:60]} |")
                 continue
             rf = r["roofline"]
-            hint = MOVE_HINTS.get((rf["bound"], r["kind"]), "")
+            terms = profile.roofline(profile.record_from_dryrun(r), peaks,
+                                     dtype="bf16")
+            hint = MOVE_HINTS.get((terms["bound"], r["kind"]), "")
             lines.append(
-                f"| {a} | {s} | {fmt(rf['compute_s'])} | {fmt(rf['memory_s'])}"
-                f" | {fmt(rf['collective_s'])} | **{rf['bound']}** | "
-                f"{rf['model_flops']:.2e} | {rf['useful_ratio']:.2f} | "
-                f"{hint} |")
+                f"| {a} | {s} | {fmt(terms['compute_s'])} | "
+                f"{fmt(terms['memory_s'])} | {fmt(terms['collective_s'])} | "
+                f"**{terms['bound']}** | {rf['model_flops']:.2e} | "
+                f"{rf['useful_ratio']:.2f} | {hint} |")
     return "\n".join(lines)
 
 

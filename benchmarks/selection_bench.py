@@ -31,8 +31,16 @@ Compares, on identical data and keys:
 
 Activation maps are mode-structured and low-rank (per-class cluster modes on
 a decaying spectrum) — the regime the paper's PCA step presumes; white noise
-would make selection itself meaningless. Writes BENCH_selection.json so the
-perf trajectory of this path is tracked from this PR on.
+would make selection itself meaningless. Writes BENCH_selection.json (through
+the ``repro.obs.registry`` writer, so every run lands in the bench history)
+so the perf trajectory of this path is tracked from this PR on.
+
+FLOPs/bytes per path are MEASURED — ``profiled_jit``'s cost record, derived
+from the compiled HLO by the repo's one cost deriver
+(``launch/hlo_analysis``) — not analytic estimates. The early-exit Lloyd
+while-loop has no static trip count, so those records count its body once
+and are flagged lower bounds (``cost_is_lower_bound``); utilization rows
+divide measured FLOPs by measured wall against the current backend's peak.
 """
 from __future__ import annotations
 
@@ -48,17 +56,13 @@ import numpy as np
 from repro.core.selection import (select_metadata, select_metadata_batched,
                                   select_metadata_reference)
 from repro.data import SyntheticActivationMaps
-from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.obs import profile
+from repro.obs.registry import write_bench
 from repro.obs.timing import timeit
-
-# the selection engine computes in f32; the MXU's f32 throughput is half
-# the bf16 peak the mesh constants quote
-PEAK_FLOPS_F32 = PEAK_FLOPS_BF16 / 2
 
 # paper-scale operating point
 N, SHAPE, NUM_CLASSES, CLUSTERS = 2500, (16, 16, 4), 10, 10
 PCA_P, KMEANS_ITERS, BATCH = 64, 25, 8
-SKETCH = PCA_P + 32                      # randomized-PCA sketch width
 CHUNK = 4                                # streaming chunk (clients) to bench
 SMOKE_DEVICES = 8                        # host devices for the sharded row
 
@@ -76,25 +80,20 @@ def _time(fn, iters=7):
     return timeit(fn, iters=iters, reduce="min")
 
 
-def _roofline():
-    """Analytic v5e estimate for one fused_fast client: FLOPs of the
-    randomized PCA + Lloyd sweeps, HBM bytes of the streamed passes."""
-    d = int(np.prod(SHAPE))
-    ck = NUM_CLASSES * CLUSTERS
-    pca_flops = 10 * N * d * SKETCH              # sketch + power iter + b
-    init_flops = 2 * N * PCA_P * CLUSTERS * (CLUSTERS - 1) * NUM_CLASSES
-    sweep_flops = 4 * N * PCA_P * ck             # dist + stats per sweep
-    flops = pca_flops + init_flops + KMEANS_ITERS * sweep_flops
-    xbytes = 5 * N * d * 4                       # PCA passes over the maps
-    fbytes = (KMEANS_ITERS + 2) * N * PCA_P * 4  # Lloyd passes over feats
-    nbytes = xbytes + fbytes
+def _roofline_v5e(cost):
+    """v5e projection of one fused_fast client from the MEASURED cost
+    record (same keys as the old analytic estimate, so the trajectory in
+    ``bench_history.jsonl`` stays comparable)."""
+    tp = profile.peak_table("tpu")
+    rf = profile.roofline(cost, tp, dtype="f32")
     return {
-        "flops": float(flops),
-        "hbm_bytes": float(nbytes),
-        "v5e_compute_us": flops / PEAK_FLOPS_F32 * 1e6,
-        "v5e_hbm_us": nbytes / HBM_BW * 1e6,
-        "v5e_roofline_us": max(flops / PEAK_FLOPS_F32,
-                               nbytes / HBM_BW) * 1e6,
+        "flops": cost.flops,
+        "hbm_bytes": cost.hbm_bytes,
+        "hlo_unknown_trip_loops": cost.unknown_trip_loops,
+        "v5e_compute_us": rf["compute_s"] * 1e6,
+        "v5e_hbm_us": rf["memory_s"] * 1e6,
+        "v5e_roofline_us": max(rf["compute_s"], rf["memory_s"]) * 1e6,
+        "bound": rf["bound"],
     }
 
 
@@ -195,6 +194,25 @@ def run(out_path: str = "BENCH_selection.json"):
         lambda: _chunked(bacts, blabels, bkeys, kw), iters=3)
     sharded = _measure_sharded()
 
+    # measured cost records (HLO-derived; cached per signature, so these
+    # reuse what the profiled calls above already compiled)
+    cost_exact = select_metadata.cost(acts, labels, key, **kw)
+    cost_fast = select_metadata.cost(acts, labels, key,
+                                     pca_solver="randomized", **kw)
+    cost_batch = select_metadata_batched.cost(bacts, blabels, bkeys,
+                                              pca_solver="randomized", **kw)
+    peaks = profile.peak_table(jax.default_backend())
+
+    def cost_fields(cost, wall, nclients=1):
+        """Measured flops/bytes (per client) + utilization of the measured
+        wall against this backend's f32 peak."""
+        if cost is None:
+            return {}
+        return {"flops": cost.flops / nclients,
+                "hbm_bytes": cost.hbm_bytes / nclients,
+                "utilization": cost.flops / wall / peaks["peak_flops_f32"],
+                "cost_is_lower_bound": cost.unknown_trip_loops > 0}
+
     def match(s):
         return (bool(np.array_equal(np.asarray(s.indices),
                                     np.asarray(s_seed.indices)))
@@ -220,14 +238,18 @@ def run(out_path: str = "BENCH_selection.json"):
             "fused_exact": {"wall_s": t_exact,
                             "speedup_vs_seed": t_seed / t_exact,
                             "selections_match_seed": match(s_exact),
-                            "selection_agreement": agreement(s_exact)},
+                            "selection_agreement": agreement(s_exact),
+                            **cost_fields(cost_exact, t_exact)},
             "fused_fast": {"wall_s": t_fast,
                            "speedup_vs_seed": t_seed / t_fast,
                            "selections_match_seed": match(s_fast),
-                           "selection_agreement": agreement(s_fast)},
+                           "selection_agreement": agreement(s_fast),
+                           **cost_fields(cost_fast, t_fast)},
             "batched_per_client": {"wall_s": t_batch / BATCH,
                                    "speedup_vs_seed":
-                                       t_seed / (t_batch / BATCH)},
+                                       t_seed / (t_batch / BATCH),
+                                   **cost_fields(cost_batch, t_batch,
+                                                 nclients=BATCH)},
             "chunked_per_client": {
                 "wall_s": t_chunk / BATCH,
                 "chunk_clients": CHUNK,
@@ -266,26 +288,30 @@ def run(out_path: str = "BENCH_selection.json"):
                      and sharded["one_device_md5"]
                      == _indices_md5(s_batch)}),
         },
-        "roofline_v5e_fused_fast": _roofline(),
+        "roofline_v5e_fused_fast": (
+            _roofline_v5e(cost_fast) if cost_fast is not None else
+            {"error": "cost extraction failed"}),
     }
-    with open(out_path, "w") as f:
-        json.dump(report, f, indent=1)
+    write_bench(out_path, report)
 
+    ff = report["paths"]["fused_fast"]
     rows = [
         ("selection_seed", t_seed * 1e3, "ms"),
         ("selection_fused_exact", t_exact * 1e3,
          f"ms speedup={t_seed/t_exact:.2f}x match={match(s_exact)}"),
         ("selection_fused_fast", t_fast * 1e3,
-         f"ms speedup={t_seed/t_fast:.2f}x match={match(s_fast)}"),
+         f"ms speedup={t_seed/t_fast:.2f}x match={match(s_fast)} "
+         f"util={ff.get('utilization', 0):.4f}"),
         ("selection_batched_per_client", t_batch / BATCH * 1e3,
-         f"ms speedup={t_seed/(t_batch/BATCH):.2f}x"),
+         f"ms speedup={t_seed/(t_batch/BATCH):.2f}x util="
+         f"{report['paths']['batched_per_client'].get('utilization', 0):.4f}"),
         ("selection_chunked_per_client", t_chunk / BATCH * 1e3,
          f"ms chunk={CHUNK} "
          f"vs_seq_fallback={t_fast/(t_chunk/BATCH):.2f}x "
          f"match={report['paths']['chunked_per_client']['selections_match_batched']}"),
         ("selection_roofline_v5e_us",
-         report["roofline_v5e_fused_fast"]["v5e_roofline_us"],
-         "analytic, fused_fast path"),
+         report["roofline_v5e_fused_fast"].get("v5e_roofline_us", -1.0),
+         "measured HLO cost, fused_fast path"),
     ]
     sp = report["paths"]["sharded_per_client"]
     if "error" in sp:

@@ -1,4 +1,4 @@
-"""Observability discipline rule (OBS001).
+"""Observability discipline rules (OBS001, OBS002).
 
 ``repro.obs.timing`` is the repo's ONE wall-clock: warmup-aware,
 device-sync aware, monotonic (``time.time()`` steps under NTP and every
@@ -17,6 +17,19 @@ The span check is deliberately narrow — only ``obs.span`` /
 ``obs.timed_block`` attribute calls and bare names actually imported from
 ``repro.obs`` — so ``re.Match.span()`` and other unrelated ``.span``
 methods never false-positive.
+
+OBS002  an ad-hoc ``open(..., "w")`` of a ``BENCH_*.json`` file inside a
+        ``benchmarks`` directory.  Every bench report goes through
+        ``repro.obs.registry.write_bench`` — the one writer that also
+        appends the fingerprinted record to
+        ``experiments/bench_history.jsonl``; a raw ``json.dump`` silently
+        drops that run from the regression trajectory that
+        ``python -m repro.obs regress`` gates on.  The target is matched
+        by a small taint walk: a string constant containing ``BENCH_``
+        anywhere in the first ``open`` argument, or a bare name assigned
+        from such an expression (``out = os.path.join(..., "BENCH_x.json")``)
+        or defaulted to one in a function signature.  Read-mode opens are
+        always fine.
 """
 from __future__ import annotations
 
@@ -84,10 +97,88 @@ def _with_context_calls(tree: ast.Module) -> Set[int]:
     return out
 
 
+def _in_benchmarks_dir(mod: Module) -> bool:
+    return "benchmarks" in mod.path.replace("\\", "/").split("/")[:-1]
+
+
+def _contains_bench_const(node: ast.AST) -> bool:
+    """Any string constant containing 'BENCH_' anywhere under ``node``."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str) \
+                and "BENCH_" in n.value:
+            return True
+    return False
+
+
+def _bench_tainted_names(tree: ast.Module) -> Set[str]:
+    """Bare names bound (by assignment or signature default) to an
+    expression mentioning a BENCH_ path constant."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and _contains_bench_const(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                and isinstance(node.target, ast.Name) \
+                and _contains_bench_const(node.value):
+            out.add(node.target.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args
+            pos = args.posonlyargs + args.args
+            for a, d in zip(pos[len(pos) - len(args.defaults):],
+                            args.defaults):
+                if d is not None and _contains_bench_const(d):
+                    out.add(a.arg)
+            for a, d in zip(args.kwonlyargs, args.kw_defaults):
+                if d is not None and _contains_bench_const(d):
+                    out.add(a.arg)
+    return out
+
+
+def _open_write_mode(node: ast.Call) -> bool:
+    """True when this ``open(...)`` call's mode writes (w/a/x/+)."""
+    mode = None
+    if len(node.args) >= 2:
+        mode = node.args[1]
+    for kw in node.keywords:
+        if kw.arg == "mode":
+            mode = kw.value
+    if mode is None:
+        return False                       # default 'r'
+    if isinstance(mode, ast.Constant) and isinstance(mode.value, str):
+        return bool(set(mode.value) & set("wax+"))
+    return True                            # dynamic mode: assume the worst
+
+
+def _check_bench_writer(mod: Module) -> List[Finding]:
+    if not _in_benchmarks_dir(mod):
+        return []
+    tainted = _bench_tainted_names(mod.tree)
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id == "open" and node.args):
+            continue
+        target = node.args[0]
+        is_bench = _contains_bench_const(target) or (
+            isinstance(target, ast.Name) and target.id in tainted)
+        if is_bench and _open_write_mode(node):
+            findings.append(Finding(
+                rule="OBS002", path=mod.path, line=node.lineno,
+                message="ad-hoc write of a BENCH_*.json bypasses the "
+                        "bench run-registry",
+                hint="use repro.obs.registry.write_bench(path, report) — "
+                     "it writes the JSON and appends the fingerprinted "
+                     "record to experiments/bench_history.jsonl"))
+    return findings
+
+
 def check(mod: Module) -> List[Finding]:
     if _in_obs_package(mod):
         return []
-    findings: List[Finding] = []
+    findings: List[Finding] = list(_check_bench_writer(mod))
     time_aliases = _time_aliases(mod)
     clock_names = _clock_names(mod)
     span_names = _obs_span_names(mod)

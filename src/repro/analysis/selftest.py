@@ -366,6 +366,43 @@ def f(s):
     m = re.match(r"x+", s)
     return m.span()
 """}),
+    Fixture("obs002_adhoc_bench_write", "OBS002", {
+        "benchmarks/bad_bench.py": """
+import json
+import os
+
+def run(report):
+    out = os.path.join(os.path.dirname(__file__), "BENCH_x.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+"""}),
+    Fixture("obs002_tainted_default_write", "OBS002", {
+        "benchmarks/bad_bench.py": """
+import json
+
+def run(report, out_path="BENCH_x.json"):
+    with open(out_path, "w") as f:
+        json.dump(report, f)
+"""}),
+    Fixture("obs002_registry_writer_ok", None, {
+        "benchmarks/good_bench.py": """
+import os
+
+from repro.obs.registry import write_bench
+
+def run(report):
+    out = os.path.join(os.path.dirname(__file__), "BENCH_x.json")
+    write_bench(out, report)
+    with open(out) as f:
+        return f.read()
+"""}),
+    Fixture("obs002_outside_benchmarks_ok", None, {"tools/export.py": """
+import json
+
+def dump(report):
+    with open("BENCH_x.json", "w") as f:
+        json.dump(report, f)
+"""}),
 ]
 
 

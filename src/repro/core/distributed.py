@@ -47,6 +47,7 @@ from repro.core.selection import (Selection, select_metadata,
 from repro.core.split import SplitModel
 from repro.data.partition import ClientData
 from repro.fl.comms import CommLedger
+from repro.obs.profile import profiled_jit
 
 PyTree = Any
 
@@ -283,6 +284,29 @@ def select_metadata_sharded(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
 # --------------------------------------------------------------------------
 # LocalUpdate over a stacked cohort (§3.2)
 # --------------------------------------------------------------------------
+@profiled_jit(name="local_update_stack", static_argnames=("model", "cfg"))
+def _local_update_stack(model: SplitModel, cfg: FLConfig, params: PyTree,
+                        xs: jnp.ndarray, ys: jnp.ndarray, keys: jax.Array):
+    """The single-host stacked LocalUpdate as one compiled function
+    (``model``/``cfg`` are frozen dataclasses, so they key the jit cache
+    as statics — the profiled wrapper's recompilation sentinel then
+    catches any per-round cache miss on the cohort hot path)."""
+    from repro.core.rounds import local_batches  # lazy: rounds imports us
+    from repro.optim import sgd
+    opt = sgd(cfg.local_lr)
+
+    def one(args):
+        x, y, key = args
+        k_loc = jax.random.split(key)[1]
+        bx, by = local_batches(x, y, k_loc, cfg)
+        new_p, _, losses = fa.local_update(
+            params, opt, opt.init(params), (bx, by),
+            lambda p, b: model.loss(p, b))
+        return new_p, losses.mean()
+
+    return jax.lax.map(one, (xs, ys, keys))
+
+
 def local_update_cohort(model: SplitModel, params: PyTree, xs: jnp.ndarray,
                         ys: jnp.ndarray, keys: jax.Array, cfg: FLConfig,
                         mesh: Optional[Mesh] = None):
@@ -297,21 +321,22 @@ def local_update_cohort(model: SplitModel, params: PyTree, xs: jnp.ndarray,
     bit-identical results with the Python-loop dispatch overhead still gone.
     Cross-client parallelism comes from ``mesh`` instead: shard_map splits
     the client axis over the ``data`` axis and each device maps its shard."""
-    from repro.core.rounds import local_batches  # lazy: rounds imports us
-    from repro.optim import sgd
-    opt = sgd(cfg.local_lr)
     keys = jnp.asarray(keys)
 
-    def one(args):
-        x, y, key = args
-        k_loc = jax.random.split(key)[1]
-        bx, by = local_batches(x, y, k_loc, cfg)
-        new_p, _, losses = fa.local_update(
-            params, opt, opt.init(params), (bx, by),
-            lambda p, b: model.loss(p, b))
-        return new_p, losses.mean()
-
     if data_axis_size(mesh) > 1:
+        from repro.core.rounds import local_batches  # lazy: rounds imports us
+        from repro.optim import sgd
+        opt = sgd(cfg.local_lr)
+
+        def one(args):
+            x, y, key = args
+            k_loc = jax.random.split(key)[1]
+            bx, by = local_batches(x, y, k_loc, cfg)
+            new_p, _, losses = fa.local_update(
+                params, opt, opt.init(params), (bx, by),
+                lambda p, b: model.loss(p, b))
+            return new_p, losses.mean()
+
         (xs, ys, keys), unpad = _pad_clients((xs, ys, keys),
                                              data_axis_size(mesh))
         fn = shard_map(lambda x, y, k: jax.lax.map(one, (x, y, k)),
@@ -319,7 +344,7 @@ def local_update_cohort(model: SplitModel, params: PyTree, xs: jnp.ndarray,
                        out_specs=P("data"), check_rep=False)
         return unpad(fn(xs, ys, keys))
 
-    return jax.lax.map(one, (xs, ys, keys))
+    return _local_update_stack(model, cfg, params, xs, ys, keys)
 
 
 # --------------------------------------------------------------------------

@@ -98,9 +98,17 @@ def select_for_clients(model: SplitModel, params: PyTree,
                                   len(clients),
                                   data_axis=D.data_axis_size(mesh))
     xs, ys = D.cohort_arrays(clients)
-    sel_acts, sel_ys, valid, lloyd_iters = D.select_cohort(
-        model, params, xs, ys, keys, cfg, num_classes, chunk_size=chunk,
-        mesh=mesh, gather=True)
+    with obs.span("select", clients=len(clients), batched=True) as ssp:
+        sel_acts, sel_ys, valid, lloyd_iters = D.select_cohort(
+            model, params, xs, ys, keys, cfg, num_classes, chunk_size=chunk,
+            mesh=mesh, gather=True)
+        ssp.sync(valid)
+        if ssp.enabled:
+            vnp = np.asarray(valid).astype(bool)
+            total = int(np.prod(x_shape[:1])) * len(clients)
+            ssp.set(selected=int(vnp.sum()),
+                    selected_fraction=float(vnp.sum()) / max(total, 1),
+                    lloyd_iters=int(np.asarray(lloyd_iters).min()))
     return [(xs[i], ys[i], (sel_acts[i], sel_ys[i], valid[i]),
              lloyd_iters[i])
             for i in range(len(clients))]

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as kref
+from repro.obs.profile import profiled_jit
 
 # the additive forbidden-column mask constant — shared with the kernel's
 # oracle (ops.py pads with it too); the f32 absorption argument in
@@ -287,7 +288,7 @@ def kmeans_init(x: jnp.ndarray, k: int, key: jax.Array,
     return c
 
 
-@functools.partial(jax.jit, static_argnames=("k", "iters", "use_pallas"))
+@profiled_jit(static_argnames=("k", "iters", "use_pallas"))
 def kmeans(x: jnp.ndarray, k: int, key: jax.Array, iters: int = 25,
            mask: Optional[jnp.ndarray] = None,
            use_pallas: bool = False) -> KMeansState:
@@ -343,10 +344,9 @@ def _fit_features(acts: jnp.ndarray, pca_components: int, pca_solver: str):
     return feats
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("num_classes", "clusters_per_class",
-                                    "pca_components", "kmeans_iters",
-                                    "use_pallas", "per_class", "pca_solver"))
+@profiled_jit(static_argnames=("num_classes", "clusters_per_class",
+                               "pca_components", "kmeans_iters",
+                               "use_pallas", "per_class", "pca_solver"))
 def select_metadata(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
                     key: jax.Array, *, num_classes: int = 10,
                     clusters_per_class: int = 10, pca_components: int = 200,
@@ -415,24 +415,35 @@ def select_metadata(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
     return Selection(idx, sizes > 0, feats, lloyd_it)
 
 
+@profiled_jit(static_argnames=("num_classes", "clusters_per_class",
+                               "pca_components", "kmeans_iters",
+                               "use_pallas", "per_class", "pca_solver"))
 def select_metadata_batched(acts: jnp.ndarray, labels: Optional[jnp.ndarray],
-                            keys: jax.Array, **kwargs) -> Selection:
+                            keys: jax.Array, *, num_classes: int = 10,
+                            clusters_per_class: int = 10,
+                            pca_components: int = 200,
+                            kmeans_iters: int = 25, use_pallas: bool = False,
+                            per_class: bool = True,
+                            pca_solver: str = "exact") -> Selection:
     """vmap of ``select_metadata`` over a stacked cohort of clients.
 
     acts: (B, N, ...), labels: (B, N) or None, keys: (B,) client keys (e.g.
     ``jax.random.split(key, B)``). Returns a Selection whose fields carry a
     leading client axis. Keyword args are the static ``select_metadata``
-    knobs and apply to every client."""
-    fn = functools.partial(select_metadata, **kwargs)
+    knobs (same defaults) and apply to every client."""
+    fn = functools.partial(
+        select_metadata, num_classes=num_classes,
+        clusters_per_class=clusters_per_class, pca_components=pca_components,
+        kmeans_iters=kmeans_iters, use_pallas=use_pallas, per_class=per_class,
+        pca_solver=pca_solver)
     if labels is None:
         return jax.vmap(lambda a, k: fn(a, None, k))(acts, keys)
     return jax.vmap(fn)(acts, labels, keys)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("num_classes", "clusters_per_class",
-                                    "pca_components", "kmeans_iters",
-                                    "use_pallas", "per_class"))
+@profiled_jit(static_argnames=("num_classes", "clusters_per_class",
+                               "pca_components", "kmeans_iters",
+                               "use_pallas", "per_class"))
 def select_metadata_reference(acts: jnp.ndarray,
                               labels: Optional[jnp.ndarray],
                               key: jax.Array, *, num_classes: int = 10,

@@ -27,6 +27,7 @@ from repro.configs import ARCHS, INPUT_SHAPES, TrainConfig, get_config
 from repro.launch import mesh as mesh_lib
 from repro.launch.hlo_analysis import parse_hlo
 from repro.launch.specs import input_specs
+from repro.obs import profile
 from repro.launch.steps import (make_decode_step, make_prefill_step,
                                 make_train_step)
 from repro.models.registry import count_params
@@ -137,14 +138,15 @@ def run_one(arch: str, shape_name: str, *, multi_pod=False, smoke=False,
 
         hlo = compiled.as_text()
         hc = parse_hlo(hlo)
-        coll = {"total_bytes": hc.collective_total,
+        crec = profile.record_from_hlo(hc)
+        coll = {"total_bytes": crec.collective_bytes,
                 "bytes_by_kind": dict(hc.coll_bytes),
                 "count_by_kind": dict(hc.coll_count),
-                "unknown_trip_counts": hc.unknown_trips}
+                "unknown_trip_counts": crec.unknown_trip_loops}
         # trip-count-expanded per-device totals (see hlo_analysis.py —
         # compiled.cost_analysis() does NOT expand while loops on CPU)
-        cost["flops_expanded"] = hc.flops
-        cost["bytes_expanded"] = hc.bytes
+        cost["flops_expanded"] = crec.flops
+        cost["bytes_expanded"] = crec.hbm_bytes
 
         n_params = count_params(cfg)
         n_active = count_params(cfg, active_only=True)
@@ -184,18 +186,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod=False, smoke=False,
 
 
 def roofline_terms(rec: dict, tcfg: TrainConfig) -> dict:
-    """The three roofline terms (per brief) from per-device HLO numbers."""
+    """The three roofline terms (per brief) from per-device HLO numbers,
+    via the one roofline calculator (``repro.obs.profile.roofline``)."""
     chips = rec["chips"]
-    flops_dev = rec["cost"].get("flops_expanded",
-                                rec["cost"].get("flops", 0.0))
-    bytes_dev = rec["cost"].get("bytes_expanded",
-                                rec["cost"].get("bytes accessed", 0.0))
-    coll_dev = rec["collectives"]["total_bytes"]
-    compute_s = flops_dev / mesh_lib.PEAK_FLOPS_BF16
-    memory_s = bytes_dev / mesh_lib.HBM_BW
-    collective_s = coll_dev / mesh_lib.ICI_BW
-    bound = max((("compute", compute_s), ("memory", memory_s),
-                 ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    crec = profile.record_from_dryrun(rec)
+    flops_dev = crec.flops
+    terms = profile.roofline(crec, profile.peak_table("tpu"), dtype="bf16")
     # MODEL_FLOPS: 6*N_active*D train (D = tokens this step), 2*N*D decode
     toks = rec["global_batch"] * (rec["seq_len"] if rec["kind"] != "decode"
                                   else 1)
@@ -208,10 +204,9 @@ def roofline_terms(rec: dict, tcfg: TrainConfig) -> dict:
     else:
         model_flops = 2 * n * toks
     hlo_total = flops_dev * chips
-    return {"compute_s": compute_s, "memory_s": memory_s,
-            "collective_s": collective_s, "bound": bound,
-            "model_flops": model_flops, "hlo_flops_total": hlo_total,
-            "useful_ratio": (model_flops / hlo_total) if hlo_total else 0.0}
+    terms.update(model_flops=model_flops, hlo_flops_total=hlo_total,
+                 useful_ratio=(model_flops / hlo_total) if hlo_total else 0.0)
+    return terms
 
 
 PAIRS = [(a, s) for a in ARCHS for s in INPUT_SHAPES]

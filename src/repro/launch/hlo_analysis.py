@@ -101,6 +101,22 @@ class HloCost:
                 "unknown_trip_counts": self.unknown_trips}
 
 
+def _operand_shapes(args: str, symtab: Dict[str, str]) -> List[List[int]]:
+    """Per-operand dims for an instruction's argument list.  Modern HLO
+    annotates operands inline ('f32[64,32]{1,0} %Arg_0.1'); older dumps
+    give bare names ('%Arg_0.1') resolved via the symbol table."""
+    seg = args.split(")", 1)[0]
+    inline = _TYPE_RE.findall(seg)
+    if inline:
+        return [[int(x) for x in dims.split(",")] if dims else []
+                for _, dims in inline]
+    shapes: List[List[int]] = []
+    for name in re.findall(r"%([\w\.\-]+)", seg):
+        sh = _first_shape(symtab.get(name, ""))
+        shapes.append(sh[1] if sh else [])
+    return shapes
+
+
 def _dot_flops(out_type: str, args: str, symtab: Dict[str, str],
                line: str) -> float:
     out = _first_shape(out_type)
@@ -112,17 +128,13 @@ def _dot_flops(out_type: str, args: str, symtab: Dict[str, str],
         out_n *= d
     # contraction size from lhs operand dims
     m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-    ops = [a.strip().lstrip("%") for a in args.split("),")[0].split(",")]
+    shapes = _operand_shapes(args, symtab)
     contract = 1
-    if m and ops:
-        lhs_type = symtab.get(ops[0])
-        if lhs_type:
-            sh = _first_shape(lhs_type)
-            if sh:
-                dims = sh[1]
-                for i in m.group(1).split(","):
-                    if i != "" and int(i) < len(dims):
-                        contract *= dims[int(i)]
+    if m and shapes and shapes[0]:
+        dims = shapes[0]
+        for i in m.group(1).split(","):
+            if i != "" and int(i) < len(dims):
+                contract *= dims[int(i)]
     return 2.0 * out_n * max(contract, 1)
 
 
@@ -139,12 +151,10 @@ def _conv_flops(out_type: str, line: str, symtab, args) -> float:
     if m:
         for s in m.group(1).split("x"):
             spatial *= int(s)
-    ops = [a.strip().lstrip("%") for a in args.split("),")[0].split(",")]
+    shapes = _operand_shapes(args, symtab)
     cin = 1
-    if len(ops) > 1 and ops[1] in symtab:
-        sh = _first_shape(symtab[ops[1]])
-        if sh and len(sh[1]) >= 3:
-            cin = sh[1][-2]   # HWIO kernel: I dim
+    if len(shapes) > 1 and len(shapes[1]) >= 3:
+        cin = shapes[1][-2]   # HWIO kernel: I dim
     return 2.0 * out_n * spatial * cin
 
 

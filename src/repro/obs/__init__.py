@@ -32,9 +32,12 @@ from __future__ import annotations
 
 from typing import Any
 
-from repro.obs import timing
+from repro.obs import registry, timing
 from repro.obs.metrics import (NULL_METRICS, Counter, Gauge, Histogram,
                                MeteredLedger, MetricsRegistry, NullMetrics)
+from repro.obs.profile import (CostRecord, ProfiledFunction, peak_table,
+                               profiled_jit, roofline)
+from repro.obs.registry import regress_report, write_bench
 from repro.obs.tracer import (NULL_SPAN, NULL_TRACER, SCHEMA, NullTracer,
                               Span, TraceError, Tracer, get_tracer,
                               load_trace, span_paths, to_chrome, use_tracer)
@@ -44,7 +47,9 @@ __all__ = [
     "NULL_SPAN", "TraceError", "load_trace", "span_paths", "to_chrome",
     "get_tracer", "use_tracer", "span", "timed_block", "event", "inc",
     "gauge", "MetricsRegistry", "NullMetrics", "NULL_METRICS", "Counter",
-    "Gauge", "Histogram", "MeteredLedger",
+    "Gauge", "Histogram", "MeteredLedger", "CostRecord", "ProfiledFunction",
+    "profiled_jit", "peak_table", "roofline", "registry", "write_bench",
+    "regress_report",
 ]
 
 
