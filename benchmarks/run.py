@@ -4,12 +4,13 @@ suite. Prints ``name,value,extra`` CSV rows and a paper-claim validation
 summary; writes experiments/bench_results.json, BENCH_selection.json (the
 §3.1 hot-path trajectory), BENCH_comms.json (bytes-per-round + accuracy
 per transport codec), BENCH_faults.json (the chaos sweep: graceful
-degradation + recovery overhead under injected faults) and BENCH_obs.json
-(tracing overhead + byte-attribution completeness), all tracked PR over
-PR.
+degradation + recovery overhead under injected faults), BENCH_obs.json
+(tracing overhead + byte-attribution completeness) and BENCH_service.json
+(async service: sync-equivalence, throughput, accuracy-vs-staleness), all
+tracked PR over PR. Schemas: docs/benchmarks.md.
 
   PYTHONPATH=src python -m benchmarks.run \\
-      [--only tables|kernels|comms|selection|faults|analysis|obs]
+      [--only tables|kernels|comms|selection|faults|analysis|obs|service]
 """
 from __future__ import annotations
 
@@ -100,6 +101,20 @@ def run_faults(results):
     return report
 
 
+def run_service(results):
+    """Async service benchmark: sync-equivalence vs FLSimulation,
+    throughput (rounds/sec, bytes/sec) and the accuracy-vs-staleness
+    curve -> BENCH_service.json."""
+    from benchmarks import service_bench as V
+    print("# async FL service (degenerate oracle + staleness sweep) "
+          f"-> BENCH_service.json ({V.NUM_CLIENTS} clients x "
+          f"{V.SAMPLES_PER_CLIENT} samples, {V.ROUNDS} rounds)")
+    rows, report = V.run()
+    _emit(rows)
+    results["service"] = report
+    return report
+
+
 def run_obs(results):
     """Observability benchmark: tracing overhead (traced vs disabled),
     byte-attribution completeness (asserted) and trace throughput
@@ -168,7 +183,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "tables", "kernels", "comm", "comms",
-                             "selection", "faults", "analysis", "obs"])
+                             "selection", "faults", "analysis", "obs",
+                             "service"])
     args = ap.parse_args(argv)
 
     results = {}
@@ -181,6 +197,8 @@ def main(argv=None) -> None:
         run_faults(results)
     if args.only in (None, "obs"):
         run_obs(results)
+    if args.only in (None, "service"):
+        run_service(results)
     if args.only in (None, "kernels"):
         run_kernels(results)
     if args.only in (None, "analysis"):

@@ -6,7 +6,10 @@ Rule families (see each module's docstring for the full contract):
 * PUR001–PUR004  tracer safety in jitted code    (repro.analysis.purity)
 * PAL001–PAL004  Pallas BlockSpec tiling + VMEM  (repro.analysis.pallas_rules)
 * LED001–LED004  byte-true ledger / wire audit   (repro.analysis.ledger)
-* OBS001         one-wall-clock + balanced spans (repro.analysis.obs_rules)
+* OBS001–OBS002  one-wall-clock + balanced spans,
+                 write_bench-only BENCH writes    (repro.analysis.obs_rules)
+* DOC001         public API docstrings on the
+                 transport/obs contract surfaces  (repro.analysis.docs_rules)
 * SUP001         reason-less inline suppression  (repro.analysis.core)
 
 Run ``python -m repro.analysis src benchmarks`` (exit 0 against the
@@ -22,7 +25,8 @@ RULE_IDS = (
     "PUR001", "PUR002", "PUR003", "PUR004",
     "PAL001", "PAL002", "PAL003", "PAL004",
     "LED001", "LED002", "LED003", "LED004",
-    "OBS001",
+    "OBS001", "OBS002",
+    "DOC001",
     "SUP001",
 )
 

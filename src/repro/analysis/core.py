@@ -142,7 +142,8 @@ def run_analysis(paths: Sequence[str], root: Optional[str] = None,
     Suppressed findings (directive with reason on the same or previous
     line) are dropped; reason-less directives surface as SUP001.
     """
-    from repro.analysis import ledger, obs_rules, pallas_rules, purity, rng
+    from repro.analysis import (docs_rules, ledger, obs_rules, pallas_rules,
+                                purity, rng)
 
     root = os.path.abspath(root or os.getcwd())
     modules: List[Module] = []
@@ -158,6 +159,7 @@ def run_analysis(paths: Sequence[str], root: Optional[str] = None,
         findings.extend(pallas_rules.check(mod))
         findings.extend(ledger.check(mod))
         findings.extend(obs_rules.check(mod))
+        findings.extend(docs_rules.check(mod))
         findings = _apply_suppressions(mod, findings)
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return findings

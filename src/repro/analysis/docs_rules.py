@@ -1,0 +1,69 @@
+"""Documentation discipline rule (DOC001).
+
+``repro.fl.transport`` and ``repro.obs`` are the repo's two CONTRACT
+surfaces: the wire format (frame layouts, the v2 flags byte + CRC trailer,
+byte-true ledger charging) and the observability API (span taxonomy,
+``write_bench``'s history contract). Those contracts live in docstrings —
+docs/architecture.md points at them instead of restating them — so an
+undocumented public symbol there is a hole in the spec, not a style nit.
+
+DOC001  a public (non-underscore) module-level class or function — or a
+        public method of a public class — without a docstring, in any
+        module under an ``fl/transport`` or ``obs`` package directory.
+        Private helpers (leading ``_``, including dunder methods) and
+        nested functions are exempt; other packages are out of scope (the
+        rule polices the contract surfaces, not the whole tree).
+
+Existing gaps are grandfathered by ``analysis_baseline.json`` like every
+other rule — only NEW undocumented public API fails CI.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.core import Finding, Module
+
+RULE = "DOC001"
+
+_DEFS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _in_scope(mod: Module) -> bool:
+    """True for modules under an ``fl/transport`` or ``obs`` directory."""
+    dirs = mod.path.replace("\\", "/").split("/")[:-1]
+    if "obs" in dirs:
+        return True
+    return "transport" in dirs and "fl" in dirs
+
+
+def _public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _finding(mod: Module, node: ast.AST, kind: str, name: str) -> Finding:
+    return Finding(
+        rule=RULE, path=mod.path, line=node.lineno,
+        message=f"public {kind} '{name}' has no docstring",
+        hint="document the contract (frame layout / span semantics / "
+             "charging rule) or rename with a leading '_' if internal")
+
+
+def check(mod: Module) -> List[Finding]:
+    """Missing-docstring findings for one module (empty out of scope)."""
+    if not _in_scope(mod):
+        return []
+    out: List[Finding] = []
+    for node in mod.tree.body:
+        if isinstance(node, _DEFS) and _public(node.name):
+            if ast.get_docstring(node) is None:
+                out.append(_finding(mod, node, "function", node.name))
+        elif isinstance(node, ast.ClassDef) and _public(node.name):
+            if ast.get_docstring(node) is None:
+                out.append(_finding(mod, node, "class", node.name))
+            for sub in node.body:
+                if isinstance(sub, _DEFS) and _public(sub.name) \
+                        and ast.get_docstring(sub) is None:
+                    out.append(_finding(
+                        mod, sub, "method", f"{node.name}.{sub.name}"))
+    return out

@@ -343,6 +343,7 @@ import time as _time
 monotonic = _time.perf_counter
 
 def now():
+    \"\"\"The one wall clock (documented: obs/ is DOC001 scope too).\"\"\"
     return _time.perf_counter()
 """}),
     Fixture("obs001_span_without_with", "OBS001", {"mod.py": """
@@ -402,6 +403,35 @@ import json
 def dump(report):
     with open("BENCH_x.json", "w") as f:
         json.dump(report, f)
+"""}),
+    Fixture("doc001_undocumented_transport_api", "DOC001", {
+        "fl/transport/frames.py": """
+class PingFrame:
+    def encode(self):
+        return b"ping"
+
+def decode(wire):
+    return wire
+"""}),
+    Fixture("doc001_documented_transport_api_ok", None, {
+        "fl/transport/frames.py": """
+class PingFrame:
+    \"\"\"A one-byte liveness frame.\"\"\"
+
+    def encode(self):
+        \"\"\"Frame layout: the 4 ASCII bytes 'ping', no header.\"\"\"
+        return b"ping"
+
+    def _internal(self):
+        return None
+
+def decode(wire):
+    \"\"\"Inverse of PingFrame.encode (no validation: fixed payload).\"\"\"
+    return wire
+"""}),
+    Fixture("doc001_outside_contract_dirs_ok", None, {"core/maths.py": """
+def undocumented_but_out_of_scope(x):
+    return x + 1
 """}),
 ]
 

@@ -129,7 +129,9 @@ class FLServer:
     def aggregate(self, client_params: List[PyTree], metadatas: List[tuple],
                   key: jax.Array,
                   stragglers: Optional[np.ndarray] = None,
-                  arrived: Optional[np.ndarray] = None) -> RoundResult:
+                  arrived: Optional[np.ndarray] = None,
+                  fedavg_weights: Optional[Sequence[float]] = None
+                  ) -> RoundResult:
         """``stragglers`` (from ``straggler_mask``) zero-weights the marked
         clients in Eq. 2 — their metadata still counts (Extract&Selection
         is the cheap early phase; it is LocalUpdate that misses the
@@ -137,9 +139,17 @@ class FLServer:
         clients whose UpperUpdate frame never decoded — the generalized
         arrival mask; both None keeps the exact unweighted-mean path. A
         round where no update counts keeps W_G(t-1) (guarded in
-        ``server_round``)."""
-        if stragglers is None and (arrived is None
-                                   or bool(np.all(arrived))):
+        ``server_round``).
+
+        ``fedavg_weights`` overrides the mask-derived 1/0 weights with
+        explicit per-client floats — the async service's staleness
+        discount (``repro.fl.service.aggregator``). When None (every
+        synchronous caller), the historical mask logic runs untouched, so
+        existing paths stay bit-identical."""
+        if fedavg_weights is not None:
+            weights = [float(w) for w in fedavg_weights]
+        elif stragglers is None and (arrived is None
+                                     or bool(np.all(arrived))):
             weights = None
         else:
             n = len(client_params)

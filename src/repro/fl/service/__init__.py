@@ -1,0 +1,23 @@
+"""repro.fl.service — the event-driven FL server (ROADMAP item 1).
+
+``FLSimulation`` is a synchronous for-loop over rounds; this package runs
+the same split-FL math as a continuously ticking service: seeded traffic
+models produce client arrivals (``traffic``), each arrival replays the
+existing client pipeline over the wire format, and a FedBuff-style buffered
+aggregator (``aggregator``) applies staleness-weighted WeightAverage once
+``buffer_size`` updates accumulate. The synchronous simulator remains the
+bit-exact oracle for the degenerate configuration — see
+``docs/architecture.md`` ("Bit-identity contracts") and tests/test_service.py.
+"""
+from repro.fl.service.aggregator import (BufferedAggregator, BufferEntry,
+                                         staleness_weight)
+from repro.fl.service.loop import FLService, ServiceResult
+from repro.fl.service.traffic import (Arrival, DegenerateTraffic,
+                                      DiurnalTraffic, PoissonTraffic,
+                                      TrafficModel)
+
+__all__ = [
+    "Arrival", "BufferEntry", "BufferedAggregator", "DegenerateTraffic",
+    "DiurnalTraffic", "FLService", "PoissonTraffic", "ServiceResult",
+    "TrafficModel", "staleness_weight",
+]

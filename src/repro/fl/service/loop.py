@@ -1,0 +1,271 @@
+"""The event-driven FL service: arrivals in, staleness-weighted flushes out.
+
+Where ``FLSimulation`` is a lock-step for-loop over rounds (form cohort,
+wait for everyone, aggregate), :class:`FLService` runs the server as a
+CONTINUOUS loop over ticks:
+
+  tick t:  draw arrivals from the traffic model
+           each arrival downloads W_G (one WeightBroadcast frame), runs the
+             existing client pipeline (Extract&Selection + LocalUpdate) and
+             uploads knowledge + update over the SAME transport channel the
+             simulator uses (perfect or fault-injecting)
+           uploads land in the buffered aggregator — immediately, or
+             ``delay`` ticks later (training latency); once ``buffer_size``
+             updates are buffered the flush runs MetaTraining + Eq. 2 with
+             the FedBuff staleness discount and bumps the model version
+
+Determinism and the sync oracle: each tick consumes the simulator's EXACT
+key chain (``key, k_round, k_sample = split(key, 3)``; per-arrival keys
+``split(k_round, n)``; flush keys from ``fold_in(k_round, n)``), arrivals
+are pure functions of ``(traffic seed, tick)``, and faults stay keyed per
+``(fault seed, tick, client)``. Under ``DegenerateTraffic`` with
+``buffer_size == clients_per_round`` every stream, frame and flush aligns
+with ``FLSimulation`` round-for-round — final weights and CommLedger are
+bit-identical (asserted in tests/test_service.py and BENCH_service.json's
+``async_degenerate_matches_sync`` claim).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+from repro import obs
+from repro.configs.base import FLConfig
+from repro.core.compose import evaluate
+from repro.core.rounds import run_cohort
+from repro.core.split import SplitModel
+from repro.data.datasets import Dataset
+from repro.data.partition import ClientData
+from repro.fl.server import FLServer
+from repro.fl.service.aggregator import BufferedAggregator, BufferEntry
+from repro.fl.service.traffic import DegenerateTraffic, TrafficModel
+from repro.fl.transport.channel import Channel
+from repro.obs.timing import monotonic
+
+PyTree = Any
+
+
+@dataclass
+class ServiceResult:
+    """What a service run reports (the async twin of SimulationResult)."""
+    test_acc: List[float] = field(default_factory=list)      # M_COM per eval
+    fedavg_acc: List[float] = field(default_factory=list)    # W_G per eval
+    client_loss: List[float] = field(default_factory=list)   # per arrival
+    metadata_counts: List[int] = field(default_factory=list)  # per flush
+    arrivals_per_tick: List[int] = field(default_factory=list)
+    flush_sizes: List[int] = field(default_factory=list)
+    flush_staleness: List[List[int]] = field(default_factory=list)
+    # per-tick fault/quarantine counters (same meaning as SimulationResult)
+    drops: List[int] = field(default_factory=list)
+    corruptions_detected: List[int] = field(default_factory=list)
+    retransmits: List[int] = field(default_factory=list)
+    quarantined: List[int] = field(default_factory=list)
+    comm: dict = field(default_factory=dict)
+    ticks: int = 0
+    flushes: int = 0
+    wall_time: float = 0.0
+
+    @property
+    def mean_staleness(self) -> float:
+        """Average version lag over every flushed update (0.0 in the
+        degenerate/synchronous regime)."""
+        flat = [s for fl in self.flush_staleness for s in fl]
+        return float(np.mean(flat)) if flat else 0.0
+
+
+class FLService:
+    """A continuously running FL server over the wire format.
+
+    Construction mirrors ``FLSimulation`` stream-for-stream (model init
+    key, server, tracer, perfect-or-faulty channel) so the degenerate
+    configuration is bit-identical by construction, not by luck. The
+    differences are all post-cohort: arrivals come from ``traffic``,
+    uploads queue in a ``BufferedAggregator`` (``buffer_size`` defaults to
+    ``cfg.clients_per_round``), and Eq. 2 weights decay with staleness
+    (``staleness_alpha``) instead of a deadline.
+    """
+
+    def __init__(self, model: SplitModel, clients: List[ClientData],
+                 test: Dataset, cfg: FLConfig, seed: int = 0,
+                 traffic: Optional[TrafficModel] = None,
+                 buffer_size: Optional[int] = None,
+                 staleness_alpha: float = 0.5,
+                 mesh=None, fault_plan=None, fault_seed: int = 0,
+                 quarantine_after: int = 0, quarantine_cooldown: int = 5,
+                 tracer=None):
+        self.model, self.cfg, self.test = model, cfg, test
+        self.mesh = mesh
+        key = jax.random.PRNGKey(seed)
+        k_init, self.key = jax.random.split(key)
+        params = model.init(k_init)
+        _, upper0 = model.split(params)
+        self.server = FLServer(model, params, upper0, cfg,
+                               quarantine_after=quarantine_after,
+                               quarantine_cooldown=quarantine_cooldown)
+        if tracer is None:
+            tracer = (obs.Tracer(meta={"seed": seed, "service": True,
+                                       "num_clients": len(clients)})
+                      if cfg.observability else obs.NULL_TRACER)
+        self.tracer = tracer
+        if self.tracer.enabled:
+            self.server.ledger = obs.MeteredLedger(self.tracer)
+        if fault_plan is not None and fault_plan.any_faults:
+            from repro.fl.faults import FaultyChannel
+            self.channel = FaultyChannel(self.server.ledger, fault_plan,
+                                         seed=fault_seed,
+                                         checksum=cfg.transport_checksum)
+        else:
+            self.channel = Channel(self.server.ledger,
+                                   checksum=cfg.transport_checksum)
+        self.traffic = traffic if traffic is not None else DegenerateTraffic()
+        self.aggregator = BufferedAggregator(
+            self.server,
+            buffer_size=(buffer_size if buffer_size is not None
+                         else cfg.clients_per_round),
+            staleness_alpha=staleness_alpha)
+        self.clients = list(clients)
+        self.num_classes = test.num_classes
+        # delayed uploads: (due_tick, enqueue_seq, BufferEntry) min-heap —
+        # delivery order is (due time, upload order), never hash order
+        self._pending: list = []
+        self._seq = 0
+        self._k_server = self.key          # replaced every tick
+        self._flushes_this_tick = 0
+
+    # ---- per-tick machinery ----
+    def _client_pipeline(self, cid: int, key: jax.Array, tick: int
+                         ) -> BufferEntry:
+        """One arrival end to end: broadcast -> select/update -> upload.
+        The entry captures the download version and the channel's verdict
+        (arrival bit, server-side decode) at upload time — per-tick channel
+        state must not be re-read at flush time."""
+        version = self.server.round_idx
+        with obs.span("broadcast", clients=1):
+            self.server.broadcast_weights(1, channel=self.channel)
+        with obs.span("cohort", clients=1) as csp:
+            cparams, metas, losses = run_cohort(
+                self.model, self.server.global_params,
+                [self.clients[cid]], self.cfg, key[None],
+                self.server.ledger, self.num_classes, mesh=self.mesh,
+                channel=self.channel, client_ids=[cid])
+            csp.sync(cparams)
+        arrived = bool(self.channel.update_arrived(cid))
+        dec = self.channel.decoded_update(cid)
+        params = cparams[0] if dec is None else dec
+        self._loss = float(np.mean(losses))
+        return BufferEntry(client_id=cid, params=params, metadata=metas[0],
+                           version=version, arrived=arrived, tick=tick)
+
+    def _flush_key(self, k_server: jax.Array, flush_in_tick: int):
+        """Flush f of a tick aggregates under ``k_server`` (f=0: the
+        simulator's exact key) or a fold of it (f>0: extra flushes only
+        exist in the async regime, so fresh derived streams are safe)."""
+        if flush_in_tick == 0:
+            return k_server
+        return jax.random.fold_in(k_server, flush_in_tick)
+
+    def _maybe_flush(self, k_server, tick: int, res: ServiceResult,
+                     eval_every: int):
+        while self.aggregator.ready():
+            key = self._flush_key(k_server, self._flushes_this_tick)
+            self._flushes_this_tick += 1
+            rr, staleness = self.aggregator.flush(key, tick)
+            self._last_rr = rr
+            res.flushes += 1
+            res.flush_sizes.append(len(staleness))
+            res.flush_staleness.append(staleness)
+            res.metadata_counts.append(rr.metadata_count)
+            if res.flushes % eval_every == 0:
+                self._eval(rr, res)
+                self._evaled_last = True
+            else:
+                self._evaled_last = False
+
+    def _eval(self, rr, res: ServiceResult) -> None:
+        with obs.span("eval"):
+            res.test_acc.append(evaluate(self.model, rr.composed_params,
+                                         self.test.x, self.test.y))
+            res.fedavg_acc.append(evaluate(self.model, rr.global_params,
+                                           self.test.x, self.test.y))
+
+    # ---- the loop ----
+    def run(self, ticks: int, eval_every: int = 1,
+            drain: bool = False) -> ServiceResult:
+        """Run the service for ``ticks`` ticks. ``eval_every`` evaluates
+        M_COM/W_G every that many FLUSHES (the final flush is always
+        evaluated); ``drain`` force-flushes a partial buffer after the last
+        tick so short runs still aggregate."""
+        res = ServiceResult()
+        self._last_rr = None
+        self._evaled_last = True
+        t0 = monotonic()
+        with obs.use_tracer(self.tracer):
+            for t in range(ticks):
+                with obs.span("service.tick", tick=t) as tsp:
+                    self._run_tick(t, res, eval_every, tsp)
+            if drain and self.aggregator.pending():
+                key = self._flush_key(self._k_server,
+                                      self._flushes_this_tick)
+                rr, staleness = self.aggregator.flush(key, ticks - 1)
+                self._last_rr = rr
+                res.flushes += 1
+                res.flush_sizes.append(len(staleness))
+                res.flush_staleness.append(staleness)
+                res.metadata_counts.append(rr.metadata_count)
+                self._evaled_last = False
+            if self._last_rr is not None and not self._evaled_last:
+                self._eval(self._last_rr, res)
+        res.ticks = ticks
+        res.comm = self.server.ledger.summary()
+        res.wall_time = monotonic() - t0
+        return res
+
+    def _run_tick(self, t: int, res: ServiceResult, eval_every: int,
+                  tsp) -> None:
+        # the simulator's exact per-round key chain (simulation.py keeps
+        # the same shape; the degenerate service must consume identical
+        # streams)
+        self.key, k_round, k_sample = jax.random.split(self.key, 3)
+        n_quar = self.server.num_quarantined(len(self.clients))
+        res.quarantined.append(n_quar)
+        obs.gauge("fl.quarantined", n_quar)
+        self.channel.begin_round(t)
+        arrivals = self.traffic.arrivals(t, self.server, len(self.clients),
+                                         k_sample)
+        idx = [a.client_id for a in arrivals]
+        keys = jax.random.split(k_round, len(idx)) if idx else None
+        # flcheck: disable=RNG001 (deliberate: flush keys must derive from k_round without changing the historical split count; fold_in(k_round, len(idx)) matches the simulator's k_server stream exactly)
+        self._k_server = jax.random.fold_in(k_round, len(idx))
+        self._flushes_this_tick = 0
+        # deliveries due this tick (uploads from earlier, slower arrivals)
+        while self._pending and self._pending[0][0] <= t:
+            _, _, entry = heapq.heappop(self._pending)
+            self.aggregator.submit(entry)
+            self._maybe_flush(self._k_server, t, res, eval_every)
+        n_drop = 0
+        for j, a in enumerate(arrivals):
+            entry = self._client_pipeline(a.client_id, keys[j], t)
+            res.client_loss.append(self._loss)
+            n_drop += int(not entry.arrived)
+            if a.delay > 0:
+                obs.event("service.upload_deferred", client=a.client_id,
+                          due=t + a.delay)
+                heapq.heappush(self._pending,
+                               (t + a.delay, self._seq, entry))
+                self._seq += 1
+            else:
+                self.aggregator.submit(entry)
+                self._maybe_flush(self._k_server, t, res, eval_every)
+        stats = self.channel.round_stats()
+        res.arrivals_per_tick.append(len(arrivals))
+        res.drops.append(n_drop)
+        res.corruptions_detected.append(stats["corruptions_detected"])
+        res.retransmits.append(stats["retransmits"])
+        if tsp.enabled:
+            tsp.set(arrivals=len(arrivals), drops=n_drop,
+                    quarantined=n_quar, buffered=self.aggregator.pending(),
+                    flushes=self._flushes_this_tick)

@@ -59,6 +59,8 @@ class Channel:
 
     # ---- fault surface (no-ops on the perfect wire) ----
     def begin_round(self, round_idx: int) -> None:
+        """Reset per-round wire state. A no-op on the perfect wire; fault
+        models key their RNG streams and fate tables off ``round_idx``."""
         pass
 
     def update_arrived(self, client_id: int) -> bool:
@@ -140,6 +142,8 @@ class Channel:
 # --------------------------------------------------------------------------
 def broadcast_weights(ledger: CommLedger, params: PyTree,
                       num_clients: int) -> int:
+    """Perfect-wire ``Channel.broadcast_weights`` (exact per-member frame
+    bytes charged to ``ledger``); returns total bytes charged."""
     return Channel(ledger).broadcast_weights(params, num_clients)
 
 
@@ -154,6 +158,8 @@ def upload_update(ledger: CommLedger, params: PyTree) -> int:
 def upload_knowledge(ledger: CommLedger, acts, labels, valid,
                      codec: TensorCodec,
                      pre: Optional[Quantized] = None) -> Tuple:
+    """Perfect-wire ``Channel.upload_knowledge`` for a single client:
+    encode, charge exact frame bytes, return the decoded triple."""
     return Channel(ledger).upload_knowledge(0, acts, labels, valid, codec,
                                             pre=pre)
 
@@ -183,6 +189,9 @@ def prequantize_cohort(codec: TensorCodec, sel_acts: jnp.ndarray,
 
 def upload_knowledge_batched(ledger: CommLedger, sel_acts, sel_ys, valid,
                              codec: TensorCodec) -> List[Tuple]:
+    """Perfect-wire ``Channel.upload_knowledge_batched`` over a stacked
+    cohort (clients numbered 0..B-1): one vmapped quantize, per-frame
+    exact byte charges, per-client decoded triples."""
     return Channel(ledger).upload_knowledge_batched(
         range(np.asarray(valid).shape[0]), sel_acts, sel_ys, valid, codec)
 

@@ -65,21 +65,32 @@ class TensorCodec:
 
     def encode(self, x: np.ndarray, valid: np.ndarray,
                pre: Optional[Quantized] = None) -> Tuple[bytes, bytes]:
+        """(full slot tensor, valid mask) -> (valid-row payload bytes,
+        codec param bytes). ``pre`` hands in an already-quantized payload
+        (batched cohort path); codecs without a quantize stage ignore it."""
         raise NotImplementedError
 
     def decode(self, payload: bytes, nvalid: int, d: int,
                params: bytes) -> np.ndarray:
+        """Inverse of ``encode``: payload + declared (nvalid, d) + param
+        bytes -> (nvalid, d) f32. Any size/params mismatch raises
+        ``LengthMismatch`` — wire corruption, never a numpy escape."""
         raise NotImplementedError
 
 
 class RawF32Codec(TensorCodec):
+    """Exact 4-bytes/element wire dtype (the paper's implicit accounting):
+    payload = valid rows as little-endian f32, no codec params."""
     name, code = "raw_f32", 0
 
     def encode(self, x, valid, pre=None):
+        """Valid rows -> contiguous f32 bytes; params are empty."""
         return np.ascontiguousarray(
             x[valid].astype(np.float32)).tobytes(), b""
 
     def decode(self, payload, nvalid, d, params):
+        """f32 bytes -> (nvalid, d) f32 copy; non-empty params are
+        corruption (this codec never writes any)."""
         _check_rows(payload, nvalid, d, 4, self.name)
         if params:
             raise LengthMismatch(
@@ -88,13 +99,18 @@ class RawF32Codec(TensorCodec):
 
 
 class F16Codec(TensorCodec):
+    """IEEE-754 half codec: 2 bytes/element, round-to-nearest-even on
+    encode, exact widening back to f32 on decode, no codec params."""
     name, code = "f16", 1
 
     def encode(self, x, valid, pre=None):
+        """Valid rows cast to f16 -> contiguous bytes; params are empty."""
         return np.ascontiguousarray(
             x[valid].astype(np.float16)).tobytes(), b""
 
     def decode(self, payload, nvalid, d, params):
+        """f16 bytes -> (nvalid, d) widened to f32 (exact: every half is
+        representable); non-empty params are corruption."""
         _check_rows(payload, nvalid, d, 2, self.name)
         if params:
             raise LengthMismatch(
@@ -116,6 +132,9 @@ class Int8Codec(TensorCodec):
         self.use_pallas = use_pallas
 
     def quantize(self, x, valid) -> Quantized:
+        """Run the affine-int8 hot path over one tensor: (x, valid) ->
+        ``Quantized`` levels + (xmin, scale), via the Pallas kernel or the
+        bit-identical jnp oracle (``use_pallas``)."""
         x2 = jnp.asarray(np.ascontiguousarray(x, np.float32))
         m = jnp.asarray(np.ascontiguousarray(valid, bool))
         if self.use_pallas:
@@ -126,11 +145,16 @@ class Int8Codec(TensorCodec):
         return Quantized(np.asarray(q), float(xmin), float(scale))
 
     def encode(self, x, valid, pre=None):
+        """Valid rows as int8 levels + 8 param bytes ``<ff`` (xmin, scale).
+        ``pre`` (a ``Quantized`` from the vmapped cohort quantize) skips
+        the per-client kernel call — identical wire bytes either way."""
         z = pre if pre is not None else self.quantize(x, valid)
         params = struct.pack("<ff", z.xmin, z.scale)
         return np.ascontiguousarray(z.q[valid]).tobytes(), params
 
     def decode(self, payload, nvalid, d, params):
+        """int8 levels + ``<ff`` params -> (nvalid, d) f32 via the dequant
+        contract below; params must be exactly 8 bytes."""
         _check_rows(payload, nvalid, d, 1, self.name)
         if len(params) != 8:
             raise LengthMismatch(

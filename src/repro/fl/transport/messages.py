@@ -229,10 +229,16 @@ class WeightBroadcast:
     MSG_TYPE = MSG_WEIGHT_BROADCAST
 
     def encode(self, checksum: bool = False) -> bytes:
+        """Pytree -> wire frame: header + per-leaf (dtype code, ndim,
+        dims, native-dtype bytes); ``checksum`` appends the v2 CRC32
+        trailer."""
         return _encode_pytree(self.MSG_TYPE, self.params, checksum=checksum)
 
     @classmethod
     def decode(cls, wire: bytes) -> List[np.ndarray]:
+        """Wire frame -> leaf list in encode order (structure is shared
+        out-of-band; see ``unflatten_like``). Raises transport errors, not
+        struct/numpy ones, on any malformed byte."""
         return _decode_pytree(wire, cls.MSG_TYPE)
 
 
@@ -247,10 +253,14 @@ class UpperUpdate:
     MSG_TYPE = MSG_UPPER_UPDATE
 
     def encode(self, checksum: bool = False) -> bytes:
+        """Same pytree wire layout as ``WeightBroadcast.encode``, under
+        the UpperUpdate message type byte."""
         return _encode_pytree(self.MSG_TYPE, self.params, checksum=checksum)
 
     @classmethod
     def decode(cls, wire: bytes) -> List[np.ndarray]:
+        """Wire frame -> leaf list (encode order); transport errors only
+        on malformed bytes, mirroring ``WeightBroadcast.decode``."""
         return _decode_pytree(wire, cls.MSG_TYPE)
 
 
@@ -270,6 +280,11 @@ class SelectedKnowledge:
     MSG_TYPE = MSG_SELECTED_KNOWLEDGE
 
     def encode(self, checksum: bool = False) -> bytes:
+        """Selection triple -> wire frame. Body layout after the common
+        header: ``<IIB`` (CK, nvalid, ndim of the map shape), the map dims
+        as ``<I`` each, one label-dtype code byte, the packed valid
+        bitmask, ``<H``-length-prefixed codec params, the valid labels,
+        then the codec's row payload. Only valid rows cross the wire."""
         labels = np.asarray(self.labels)
         valid = np.asarray(self.valid).astype(bool)
         shape = tuple(self.acts.shape)

@@ -43,6 +43,7 @@ def _load(path: str) -> Dict[str, Any]:
 
 
 def cmd_summarize(args: argparse.Namespace) -> int:
+    """``summarize``: per-span-path count/wall/bytes table + metrics."""
     tr = _load(args.trace)
     meta = tr["header"].get("meta", {})
     print(f"schema   {tr['header']['schema']}")
@@ -78,6 +79,7 @@ def cmd_summarize(args: argparse.Namespace) -> int:
 
 
 def cmd_export_chrome(args: argparse.Namespace) -> int:
+    """``export-chrome``: trace -> Chrome trace-event JSON file."""
     tr = _load(args.trace)
     doc = to_chrome(tr)
     with open(args.out, "w") as f:
@@ -98,6 +100,8 @@ def _diff_dicts(label: str, a: Dict[str, Any], b: Dict[str, Any]) -> int:
 
 
 def cmd_diff(args: argparse.Namespace) -> int:
+    """``diff``: structural comparison of two traces (span paths, event
+    counts, counters, unattributed bytes); exit 1 on any difference."""
     ta, tb = _load(args.a), _load(args.b)
     diffs = 0
     pa, pb = span_paths(ta), span_paths(tb)
@@ -125,6 +129,8 @@ def cmd_diff(args: argparse.Namespace) -> int:
 
 
 def cmd_regress(args: argparse.Namespace) -> int:
+    """``regress``: gate BENCH_*.json scalars against the run history
+    (``experiments/bench_history.jsonl``); exit 1 on any gated failure."""
     try:
         history = registry.load_history(args.history)
     except (OSError, ValueError) as e:
@@ -160,6 +166,7 @@ def cmd_regress(args: argparse.Namespace) -> int:
 
 
 def main(argv=None) -> int:
+    """CLI dispatcher for ``python -m repro.obs`` subcommands."""
     ap = argparse.ArgumentParser(prog="python -m repro.obs",
                                  description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)

@@ -28,6 +28,7 @@ class Counter:
         self.value = 0
 
     def inc(self, value: int = 1) -> None:
+        """Add ``value`` (default 1); never decremented."""
         self.value += value
 
 
@@ -39,6 +40,7 @@ class Gauge:
         self.value = 0.0
 
     def set(self, value: float) -> None:
+        """Overwrite the current value (last write wins)."""
         self.value = value
 
 
@@ -54,6 +56,7 @@ class Histogram:
         self.max = float("-inf")
 
     def observe(self, value: float) -> None:
+        """Fold one sample into count/sum/min/max."""
         self.count += 1
         self.total += value
         if value < self.min:
@@ -62,6 +65,7 @@ class Histogram:
             self.max = value
 
     def summary(self) -> Dict[str, float]:
+        """count/sum (+ min/max/mean once non-empty) as a plain dict."""
         if not self.count:
             return {"count": 0, "sum": 0.0}
         return {"count": self.count, "sum": self.total, "min": self.min,
@@ -109,24 +113,29 @@ class MetricsRegistry:
         self.histograms: Dict[str, Histogram] = {}
 
     def counter(self, name: str) -> Counter:
+        """The named counter, created on first use."""
         c = self.counters.get(name)
         if c is None:
             c = self.counters[name] = Counter()
         return c
 
     def gauge(self, name: str) -> Gauge:
+        """The named gauge, created on first use."""
         g = self.gauges.get(name)
         if g is None:
             g = self.gauges[name] = Gauge()
         return g
 
     def histogram(self, name: str) -> Histogram:
+        """The named histogram, created on first use."""
         h = self.histograms.get(name)
         if h is None:
             h = self.histograms[name] = Histogram()
         return h
 
     def snapshot(self) -> Dict[str, Any]:
+        """Name-sorted {counters, gauges, histograms} values — the
+        ``metrics.snapshot`` record in a trace file."""
         return {
             "counters": {k: c.value for k, c in sorted(self.counters.items())},
             "gauges": {k: g.value for k, g in sorted(self.gauges.items())},
@@ -140,15 +149,19 @@ class NullMetrics:
     __slots__ = ()
 
     def counter(self, name: str) -> _NullCounter:
+        """The shared no-op counter, whatever the name."""
         return _NULL_COUNTER
 
     def gauge(self, name: str) -> _NullGauge:
+        """The shared no-op gauge, whatever the name."""
         return _NULL_GAUGE
 
     def histogram(self, name: str) -> _NullHistogram:
+        """The shared no-op histogram, whatever the name."""
         return _NULL_HISTOGRAM
 
     def snapshot(self) -> Dict[str, Any]:
+        """Empty snapshot in the same shape as ``MetricsRegistry``."""
         return {"counters": {}, "gauges": {}, "histograms": {}}
 
 
@@ -170,9 +183,11 @@ class MeteredLedger(CommLedger):
         self.tracer = tracer
 
     def upload(self, category: str, nbytes: int, frames: int = 1) -> None:
+        """Normal ledger charge, then one ``on_ledger(\"up\", ...)``."""
         super().upload(category, nbytes, frames)
         self.tracer.on_ledger("up", category, nbytes, frames)
 
     def download(self, category: str, nbytes: int, frames: int = 1) -> None:
+        """Normal ledger charge, then one ``on_ledger(\"down\", ...)``."""
         super().download(category, nbytes, frames)
         self.tracer.on_ledger("down", category, nbytes, frames)

@@ -52,6 +52,7 @@ class CostRecord:
     unknown_trip_loops: int = 0
 
     def as_dict(self) -> Dict[str, float]:
+        """Plain-dict form for span attrs / JSON reports."""
         return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
                 "transcendentals": self.transcendentals,
                 "collective_bytes": self.collective_bytes,

@@ -91,6 +91,8 @@ def fingerprint() -> Dict[str, Any]:
 
 
 def history_record(name: str, report: Dict[str, Any]) -> Dict[str, Any]:
+    """One ``bench_history.jsonl`` line: schema, bench name, timestamp,
+    flattened scalars, boolean claims, environment fingerprint."""
     claims = report.get("claims", {})
     return {"schema": SCHEMA, "bench": name, "ts": time.time(),
             "scalars": flatten_scalars(report),

@@ -103,6 +103,7 @@ class Span:
 
     @property
     def duration(self) -> float:
+        """Wall seconds between enter and exit (0 while still open)."""
         return self.t1 - self.t0
 
     def sync(self, x: Any) -> Any:
@@ -118,15 +119,19 @@ class Span:
         return _device_sync(x)
 
     def set(self, **attrs: Any) -> None:
+        """Attach/overwrite span attributes after entry."""
         self.attrs.update(attrs)
 
     def charge(self, direction: str, category: str, nbytes: int,
                frames: int) -> None:
+        """Accumulate ledger bytes/frames under ``direction/category`` —
+        called by ``Tracer.on_ledger`` for the innermost open span."""
         key = f"{direction}/{category}"
         self.bytes[key] = self.bytes.get(key, 0) + int(nbytes)
         self.frames[key] = self.frames.get(key, 0) + int(frames)
 
     def to_record(self) -> Dict[str, Any]:
+        """The span's trace-file JSON record (attrs/bytes only if any)."""
         rec: Dict[str, Any] = {"type": "span", "id": self.span_id,
                                "parent": self.parent_id, "name": self.name,
                                "t0": self.t0, "t1": self.t1}
@@ -155,16 +160,20 @@ class NullTracer:
     metrics = NULL_METRICS
 
     def span(self, name: str, **attrs: Any) -> _NullSpan:
+        """The shared no-op span (still a context manager)."""
         return NULL_SPAN
 
     def event(self, name: str, **attrs: Any) -> None:
+        """Dropped."""
         return None
 
     def on_ledger(self, direction: str, category: str, nbytes: int,
                   frames: int) -> None:
+        """Dropped (the ledger itself still books the bytes)."""
         return None
 
     def current(self) -> None:
+        """Always None: no span is ever open."""
         return None
 
 
@@ -186,18 +195,22 @@ class Tracer:
 
     # -- recording ---------------------------------------------------
     def span(self, name: str, **attrs: Any) -> Span:
+        """New child span of the innermost open span (parent captured at
+        creation); must be used as a ``with`` context manager."""
         sid = self._next_id
         self._next_id += 1
         parent = self._stack[-1].span_id if self._stack else None
         return Span(self, sid, parent, name, attrs)
 
     def event(self, name: str, **attrs: Any) -> None:
+        """Record an instantaneous event under the current span."""
         parent = self._stack[-1].span_id if self._stack else None
         self.events.append({"type": "event", "name": name,
                             "ts": monotonic(), "parent": parent,
                             "attrs": attrs})
 
     def current(self) -> Optional[Span]:
+        """The innermost open span, or None outside any span."""
         return self._stack[-1] if self._stack else None
 
     def on_ledger(self, direction: str, category: str, nbytes: int,
@@ -235,6 +248,8 @@ class Tracer:
 
     # -- serialization -----------------------------------------------
     def to_records(self) -> List[Dict[str, Any]]:
+        """Full trace as JSON records: header, spans (close order),
+        events, then the metrics snapshot + unattributed tail."""
         header = {"type": "header", "schema": SCHEMA, "meta": self.meta}
         tail: List[Dict[str, Any]] = [
             {"type": "metrics", "snapshot": self.metrics.snapshot(),
@@ -243,6 +258,8 @@ class Tracer:
                 + list(self.events) + tail)
 
     def write_jsonl(self, path: str) -> None:
+        """Serialize ``to_records()`` to a JSONL trace file (the format
+        ``python -m repro.obs`` reads)."""
         with open(path, "w") as f:
             for rec in self.to_records():
                 f.write(json.dumps(rec) + "\n")

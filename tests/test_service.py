@@ -1,0 +1,243 @@
+"""Async FL service tests: traffic-model determinism, the staleness-weight
+oracle, the sync-degenerate bit-identity contract against FLSimulation
+(weights + ledger, perfect wire AND chaos wire), and quarantine/fault
+interplay under a stochastic arrival stream."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import FLConfig, get_wrn_config
+from repro.data import SyntheticImageDataset, partition_k_shards
+from repro.fl.faults import FaultPlan
+from repro.fl.server import FLServer
+from repro.fl.service import (Arrival, BufferedAggregator, DegenerateTraffic,
+                              DiurnalTraffic, FLService, PoissonTraffic,
+                              staleness_weight)
+from repro.fl.simulation import FLSimulation
+from repro.models.wrn import make_split_wrn
+
+
+@pytest.fixture(scope="module")
+def setting():
+    cfg = get_wrn_config().reduced()
+    model = make_split_wrn(cfg)
+    train = SyntheticImageDataset(400, image_size=cfg.image_size, seed=0)
+    test = SyntheticImageDataset(100, image_size=cfg.image_size, seed=1)
+    clients = partition_k_shards(train, 4, k_classes=2,
+                                 samples_per_client=40)
+    yield model, clients, test
+    # this module compiles many service/sim pipeline variants; drop the
+    # compiled executables so the later end-to-end modules (test_system)
+    # don't run on top of this module's accumulated XLA state
+    jax.clear_caches()
+
+
+def _flcfg(**kw):
+    base = dict(num_clients=4, clients_per_round=4, local_batch_size=20,
+                pca_components=8, clusters_per_class=3, kmeans_iters=4,
+                meta_epochs=1, meta_batch_size=10)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+class _StubServer:
+    """Just enough server for traffic-model unit tests."""
+
+    def __init__(self, n, quarantined=()):
+        self.n, self.q = n, set(quarantined)
+
+    def eligible_clients(self, num_available):
+        return [i for i in range(num_available) if i not in self.q]
+
+
+class TestTraffic:
+    def test_poisson_deterministic_per_seed(self):
+        srv = _StubServer(8)
+        a = PoissonTraffic(rate=3.0, seed=7, delay_ticks=2)
+        b = PoissonTraffic(rate=3.0, seed=7, delay_ticks=2)
+        for t in range(12):
+            assert a.arrivals(t, srv, 8, None) == b.arrivals(t, srv, 8, None)
+
+    def test_poisson_seed_changes_schedule(self):
+        srv = _StubServer(8)
+        sched = [PoissonTraffic(rate=3.0, seed=s).arrivals(5, srv, 8, None)
+                 for s in range(4)]
+        assert len({tuple(s) for s in sched}) > 1
+
+    def test_poisson_tick_keyed_not_call_order(self):
+        # drawing tick 9 before tick 2 must not change either schedule
+        srv = _StubServer(8)
+        tm = PoissonTraffic(rate=3.0, seed=1)
+        late_first = (tm.arrivals(9, srv, 8, None),
+                      tm.arrivals(2, srv, 8, None))
+        early_first = (tm.arrivals(2, srv, 8, None),
+                       tm.arrivals(9, srv, 8, None))
+        assert late_first == (early_first[1], early_first[0])
+
+    def test_poisson_respects_quarantine(self):
+        srv = _StubServer(8, quarantined={0, 3})
+        tm = PoissonTraffic(rate=50.0, seed=0)
+        ids = {a.client_id for a in tm.arrivals(0, srv, 8, None)}
+        assert ids and not (ids & {0, 3})
+
+    def test_diurnal_rate_profile(self):
+        tm = DiurnalTraffic(rate=4.0, seed=0, amplitude=1.0, period=24)
+        rates = [tm.rate_at(t) for t in range(24)]
+        assert max(rates) > 4.0 > min(rates) >= 0.0
+        assert tm.rate_at(3) == tm.rate_at(3 + 24)   # periodic
+
+    def test_degenerate_matches_server_sampler(self, setting):
+        model, clients, test = setting
+        cfg = _flcfg(clients_per_round=3)
+        key = jax.random.PRNGKey(42)
+        params = model.init(jax.random.PRNGKey(0))
+        srv = FLServer(model, params, model.split(params)[1], cfg)
+        want = srv.sample_clients(len(clients), key)
+        got = DegenerateTraffic().arrivals(0, srv, len(clients), key)
+        assert [a.client_id for a in got] == [int(i) for i in want]
+        assert all(a.delay == 0 for a in got)
+
+
+class TestStalenessWeights:
+    def test_weight_oracle(self):
+        # hand-computed (1 + s) ** -alpha
+        assert staleness_weight(0) == 1.0
+        assert staleness_weight(3, alpha=0.5) == pytest.approx(0.5)
+        assert staleness_weight(1, alpha=1.0) == pytest.approx(0.5)
+        assert staleness_weight(2, alpha=0.0) == 1.0
+        with pytest.raises(ValueError):
+            staleness_weight(-1)
+
+    def test_flush_weights_vs_hand_oracle(self):
+        agg = BufferedAggregator(server=None, buffer_size=4,
+                                 staleness_alpha=0.5)
+        w = agg._weights([0, 1, 3, 2], np.array([True, True, True, False]))
+        assert w == pytest.approx([1.0, 2.0 ** -0.5, 0.5, 0.0])
+
+    def test_all_fresh_flush_takes_sync_path(self):
+        # all-zero staleness must return None -> FLServer.aggregate's
+        # arrival-mask path, the bit-identity contract
+        agg = BufferedAggregator(server=None, buffer_size=3)
+        assert agg._weights([0, 0, 0], np.array([True, False, True])) is None
+
+
+class TestSyncDegenerateBitIdentity:
+    """The tentpole contract: buffer_size == cohort, zero staleness,
+    degenerate arrivals => the service IS the simulator, byte for byte."""
+
+    ROUNDS = 3
+
+    def _run_pair(self, setting, cfg, plan=None):
+        model, clients, test = setting
+        sim = FLSimulation(model, clients, test, cfg, seed=0,
+                           fault_plan=plan, fault_seed=5,
+                           quarantine_after=2, quarantine_cooldown=2)
+        sres = sim.run(rounds=self.ROUNDS, eval_every=self.ROUNDS)
+        svc = FLService(model, clients, test, cfg, seed=0,
+                        traffic=DegenerateTraffic(),
+                        buffer_size=cfg.clients_per_round,
+                        fault_plan=plan, fault_seed=5,
+                        quarantine_after=2, quarantine_cooldown=2)
+        vres = svc.run(ticks=self.ROUNDS, eval_every=self.ROUNDS)
+        return sim, sres, svc, vres
+
+    def test_perfect_wire_weights_and_ledger(self, setting):
+        sim, sres, svc, vres = self._run_pair(setting, _flcfg())
+        assert _leaves_equal(sim.server.global_params,
+                             svc.server.global_params)
+        svc_comm = dict(vres.comm)
+        sim_comm = {k: v for k, v in sres.comm.items()
+                    if k != "total_samples"}
+        assert svc_comm == sim_comm
+        assert vres.test_acc == sres.test_acc
+        assert vres.fedavg_acc == sres.fedavg_acc
+        assert vres.flushes == self.ROUNDS
+        assert vres.mean_staleness == 0.0
+
+    @pytest.mark.chaos
+    def test_chaos_wire_weights_and_ledger(self, setting):
+        # faults compose unchanged: the per-(round, client) fault streams
+        # line up tick-for-round, so even the chaos ledger is identical
+        cfg = _flcfg(transport_checksum=True)
+        plan = FaultPlan(drop_rate=0.25, bitflip_rate=0.1,
+                         truncate_rate=0.05, duplicate_rate=0.1)
+        sim, sres, svc, vres = self._run_pair(setting, cfg, plan=plan)
+        assert _leaves_equal(sim.server.global_params,
+                             svc.server.global_params)
+        sim_comm = {k: v for k, v in sres.comm.items()
+                    if k != "total_samples"}
+        assert dict(vres.comm) == sim_comm
+        assert vres.drops == sres.drops
+        assert vres.retransmits == sres.retransmits
+        assert vres.corruptions_detected == sres.corruptions_detected
+        assert vres.quarantined == sres.quarantined
+
+
+class TestAsyncService:
+    @pytest.mark.chaos
+    def test_chaos_arrival_stream_deterministic(self, setting):
+        """Poisson arrivals + faults + quarantine + small buffer: the full
+        async regime, run twice — everything observable must replay."""
+        model, clients, test = setting
+        cfg = _flcfg(transport_checksum=True)
+        plan = FaultPlan(drop_rate=0.3, bitflip_rate=0.1)
+
+        def once():
+            svc = FLService(model, clients, test, cfg, seed=0,
+                            traffic=PoissonTraffic(rate=2.0, seed=3,
+                                                   delay_ticks=2),
+                            buffer_size=2, staleness_alpha=0.5,
+                            fault_plan=plan, fault_seed=9,
+                            quarantine_after=1, quarantine_cooldown=2)
+            res = svc.run(ticks=6, eval_every=4, drain=True)
+            return svc, res
+
+        s1, r1 = once()
+        s2, r2 = once()
+        assert _leaves_equal(s1.server.global_params,
+                             s2.server.global_params)
+        assert r1.comm == r2.comm
+        assert r1.test_acc == r2.test_acc
+        assert r1.arrivals_per_tick == r2.arrivals_per_tick
+        assert r1.flush_staleness == r2.flush_staleness
+        # the stream actually exercised the async machinery
+        assert sum(r1.arrivals_per_tick) > 0
+        assert r1.flushes > 0
+
+    def test_staleness_accrues_with_delays(self, setting):
+        """Delayed uploads survive flushes in the queue -> staleness > 0
+        somewhere, and the run still completes + evaluates."""
+        model, clients, test = setting
+        svc = FLService(model, clients, test, _flcfg(), seed=0,
+                        traffic=PoissonTraffic(rate=2.0, seed=11,
+                                               delay_ticks=3),
+                        buffer_size=2)
+        res = svc.run(ticks=8, eval_every=100, drain=True)
+        assert res.flushes > 0
+        assert res.test_acc          # final flush always evaluated
+        assert res.mean_staleness >= 0.0
+        flat = [s for fl in res.flush_staleness for s in fl]
+        assert any(s > 0 for s in flat)
+
+    def test_quarantined_client_leaves_arrival_pool(self, setting):
+        """A client that keeps crashing gets quarantined and stops
+        arriving until the cooldown expires."""
+        model, clients, test = setting
+        # every client crashes before upload -> streaks build immediately
+        plan = FaultPlan(drop_rate=1.0)
+        svc = FLService(model, clients, test,
+                        _flcfg(transport_checksum=True), seed=0,
+                        traffic=PoissonTraffic(rate=3.0, seed=2),
+                        buffer_size=2, fault_plan=plan, fault_seed=1,
+                        quarantine_after=1, quarantine_cooldown=3)
+        res = svc.run(ticks=5, eval_every=100, drain=True)
+        assert max(res.quarantined) > 0

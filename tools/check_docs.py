@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Docs link checker (pure stdlib) — run from anywhere, exits non-zero on
+any broken reference. CI runs it in the analysis job.
+
+Checks, over README.md and docs/*.md:
+
+* relative markdown links ``[text](target)`` resolve to an existing file
+  or directory (http(s)/mailto targets are skipped);
+* fragment links into a markdown file (``file.md#anchor`` or ``#anchor``)
+  match a real heading, using GitHub's slug rules (lowercase, punctuation
+  stripped, spaces to hyphens);
+* backtick code references of the form ``path/to/file.py:NN`` name a real
+  file with at least NN lines.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+FILE_LINE_RE = re.compile(r"`([A-Za-z0-9_./-]+\.[A-Za-z0-9]+):(\d+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+# GitHub slugs keep word chars, hyphens and spaces; everything else drops
+SLUG_STRIP_RE = re.compile(r"[^\w\- ]")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading)      # unwrap inline code
+    h = SLUG_STRIP_RE.sub("", h.strip().lower())
+    return h.replace(" ", "-")
+
+
+def heading_slugs(md_path: str) -> List[str]:
+    with open(md_path, "r", encoding="utf-8") as f:
+        text = f.read()
+    # fence-stripped so commented headings inside code blocks don't count
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return [slugify(m.group(1)) for m in HEADING_RE.finditer(text)]
+
+
+def doc_files() -> List[str]:
+    out = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        out += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                if f.endswith(".md")]
+    return [p for p in out if os.path.isfile(p)]
+
+
+def check_file(path: str) -> List[str]:
+    errors: List[str] = []
+    rel = os.path.relpath(path, ROOT)
+    base = os.path.dirname(path)
+    with open(path, "r", encoding="utf-8") as f:
+        text = f.read()
+    body = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+    for m in LINK_RE.finditer(body):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        fpath, _, frag = target.partition("#")
+        tpath = path if not fpath else os.path.normpath(
+            os.path.join(base, fpath))
+        if not os.path.exists(tpath):
+            errors.append(f"{rel}: broken link target {target!r}")
+            continue
+        if frag and tpath.endswith(".md"):
+            if frag not in heading_slugs(tpath):
+                errors.append(
+                    f"{rel}: anchor #{frag} not found in "
+                    f"{os.path.relpath(tpath, ROOT)}")
+
+    for m in FILE_LINE_RE.finditer(body):
+        fpath, line = m.group(1), int(m.group(2))
+        tpath = os.path.normpath(os.path.join(ROOT, fpath))
+        if not os.path.isfile(tpath):
+            tpath = os.path.normpath(os.path.join(base, fpath))
+        if not os.path.isfile(tpath):
+            errors.append(f"{rel}: code reference {m.group(0)} — no such "
+                          f"file {fpath!r}")
+            continue
+        with open(tpath, "r", encoding="utf-8") as f:
+            nlines = sum(1 for _ in f)
+        if line > nlines:
+            errors.append(f"{rel}: code reference {m.group(0)} — "
+                          f"{fpath} has only {nlines} lines")
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    errors: List[str] = []
+    for p in files:
+        errors.extend(check_file(p))
+    for e in errors:
+        print(f"error: {e}", file=sys.stderr)
+    print(f"check_docs: {len(files)} file(s), "
+          f"{len(errors)} broken reference(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
